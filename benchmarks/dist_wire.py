@@ -1,0 +1,34 @@
+"""Beyond-paper table: the paper's §VII distributed generalization.
+
+When vertices are sharded over devices, PCPM's dedup means one update
+per (vertex, destination shard) on the wire instead of one per
+cross-shard edge (the edge-cut / distributed-BVGAS baseline).  This
+benchmark reports the wire-byte reduction per dataset for the 8-shard
+layout used in the distributed tests, plus its padded all-to-all cost
+(the static-shape price XLA extracts).
+
+Pure layout accounting — no devices needed.
+"""
+from __future__ import annotations
+
+from repro.core.distributed import build_sharded_png
+from .common import Csv, Dataset, timeit
+
+
+def run(datasets: list[Dataset], *, num_shards: int = 8) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        t = timeit(lambda: build_sharded_png(ds.graph, num_shards),
+                   warmup=0, iters=1)
+        layout = build_sharded_png(ds.graph, num_shards)
+        d_v = 4
+        pcpm_wire = layout.wire_updates * d_v
+        edgecut_wire = layout.wire_edges * 2 * d_v  # value + dst id
+        padded = (layout.num_shards ** 2 * layout.send_ids.shape[2]
+                  * d_v)
+        csv.add(f"dist/{ds.name}/wire", t,
+                f"r_wire={layout.wire_compression:.2f}"
+                f",pcpmMB={pcpm_wire / 1e6:.1f}"
+                f",edgecutMB={edgecut_wire / 1e6:.1f}"
+                f",paddedMB={padded / 1e6:.1f}")
+    return csv

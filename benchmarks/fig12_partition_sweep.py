@@ -1,0 +1,37 @@
+"""Paper Figs 12-15: partition-size design-space exploration.
+
+Sweeps part_size over powers of two; per point records the compression
+ratio r (fig 12), the model DRAM bytes (fig 13), measured per-iteration
+time (fig 14) and the scatter/gather split (fig 15, on the largest
+dataset only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spmv import SpMVEngine
+from .common import Csv, Dataset, timeit
+from .table4_runtime import _phase_times
+
+
+def run(datasets: list[Dataset], sizes=None) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        x = jnp.asarray(
+            np.random.default_rng(0).random(ds.n).astype(np.float32))
+        sweep = sizes or [max(256, ds.n // k) for k in
+                          (512, 128, 64, 16, 4, 1)]
+        for psz in sweep:
+            if psz > ds.n:
+                continue
+            eng = SpMVEngine(ds.graph, method="pcpm", part_size=psz)
+            t = timeit(lambda: jax.block_until_ready(eng(x)))
+            model = eng.layout.model_bytes()["total"]
+            ts, tg = _phase_times(eng, x)
+            csv.add(f"fig12/{ds.name}/part{psz}", t,
+                    f"r={eng.compression_ratio:.2f}"
+                    f",modelGB={model / 1e9:.3f}"
+                    f",scatter_us={ts * 1e6:.0f},gather_us={tg * 1e6:.0f}")
+    return csv

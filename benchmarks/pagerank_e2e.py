@@ -1,0 +1,37 @@
+"""End-to-end PageRank (paper §VI headline): 20 iterations, all three
+engines, correctness cross-check + total wall time including
+pre-processing (the paper's amortization argument, §VI-D3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.pagerank import pagerank
+from repro.core.spmv import SpMVEngine
+from .common import Csv, Dataset
+
+
+def run(datasets: list[Dataset], *, part_size: int = 65536,
+        iters: int = 20) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        ranks = {}
+        for method in ("pdpr", "bvgas", "pcpm"):
+            t0 = time.perf_counter()
+            eng = SpMVEngine(ds.graph, method=method, part_size=part_size)
+            t_pre = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res = pagerank(ds.graph, engine=eng, num_iterations=iters)
+            res.ranks.block_until_ready()
+            t_iter = time.perf_counter() - t0
+            ranks[method] = np.asarray(res.ranks)
+            csv.add(f"e2e/{ds.name}/{method}", t_iter + t_pre,
+                    f"pre_ms={t_pre * 1e3:.0f}"
+                    f",periter_ms={t_iter / iters * 1e3:.1f}"
+                    f",residual={res.residuals[-1]:.2e}")
+        for m in ("bvgas", "pcpm"):
+            err = float(np.abs(ranks[m] - ranks["pdpr"]).max())
+            csv.add(f"e2e/{ds.name}/agree/{m}", 0.0, f"max_abs={err:.2e}")
+    return csv

@@ -1,0 +1,125 @@
+"""Roofline analysis (deliverable g): turn dry-run JSONL records into
+the per-(arch x shape x mesh) roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline \
+        experiments/dryrun_single.jsonl [--md]
+
+Terms (TPU v5e, per chip):  compute = FLOPs / 197e12,
+memory = bytes / 819e9, collective = wire_bytes / 50e9.
+FLOPs/bytes come from the depth-extrapolated unrolled cost passes
+(per-device); wire bytes from the collective census of the compiled
+module (ring-algorithm model).  ``fraction`` = compute / max(all three)
+— the share of peak the dominant resource would allow.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+
+
+def load(paths: list[str]) -> dict:
+    """Latest record per (arch, shape, mesh) wins (reruns append);
+    error records never shadow a good record."""
+    recs = {}
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                r = json.loads(line)
+                key = (r["arch"], r["shape"], r["mesh"])
+                if "error" in r and key in recs \
+                        and "error" not in recs[key]:
+                    continue
+                recs[key] = r
+    return recs
+
+
+def terms(rec: dict) -> dict | None:
+    e = rec.get("extrapolated")
+    if not e:
+        return None
+    t_c = e["flops"] / PEAK_FLOPS_BF16
+    t_m = e["bytes"] / HBM_BW
+    t_x = e["collective_bytes"] / ICI_BW_PER_LINK
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    mf = rec.get("model_flops", 0.0) / rec.get("devices", 1)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[0], "step_s": dom[1],
+        "roofline_fraction": t_c / dom[1] if dom[1] else 0.0,
+        "useful_flops_ratio": (mf / e["flops"]) if e["flops"] else 0.0,
+        "hbm_fraction": rec.get("compile", {}).get("memory", {})
+                           .get("hbm_fraction", float("nan")),
+    }
+
+
+NOTES = {
+    "compute": "compute-bound: raise MXU utilization (fusion/layout)",
+    "memory": "memory-bound: cut HBM traffic (kernel fusion, bf16, "
+              "keep scores/messages in VMEM)",
+    "collective": "collective-bound: shrink wire bytes (PCPM dedup, "
+                  "overlap, int8 grads)",
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args(argv)
+
+    recs = load(args.paths)
+    rows = []
+    for (arch, shape, mesh), rec in sorted(recs.items()):
+        if "skip" in rec:
+            rows.append((arch, shape, mesh, None, rec["skip"]))
+            continue
+        if "error" in rec:
+            rows.append((arch, shape, mesh, None, "ERROR"))
+            continue
+        t = terms(rec)
+        if t is None:       # compile-only record (multi-pod pass)
+            hbm = rec.get("compile", {}).get("memory", {}) \
+                     .get("hbm_fraction", float("nan"))
+            rows.append((arch, shape, mesh, None,
+                         f"compile-only; HBM={hbm * 100:.0f}%"))
+            continue
+        rows.append((arch, shape, mesh, t, None))
+
+    if args.md:
+        print("| arch | shape | compute s | memory s | coll s | "
+              "dominant | roofline frac | useful FLOPs | HBM | note |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    else:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,"
+              "dominant,roofline_fraction,useful_flops_ratio,"
+              "hbm_fraction")
+    for arch, shape, mesh, t, skip in rows:
+        if t is None:
+            if args.md:
+                print(f"| {arch} | {shape} | — | — | — | — | — | — | — "
+                      f"| {skip} |")
+            else:
+                print(f"{arch},{shape},{mesh},,,,SKIP({skip}),,,")
+            continue
+        if args.md:
+            print(f"| {arch} | {shape} | {t['compute_s']:.3f} | "
+                  f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+                  f"{t['dominant']} | {t['roofline_fraction']:.2f} | "
+                  f"{t['useful_flops_ratio']:.2f} | "
+                  f"{t['hbm_fraction'] * 100:.0f}% | "
+                  f"{NOTES[t['dominant']]} |")
+        else:
+            print(f"{arch},{shape},{mesh},{t['compute_s']:.4f},"
+                  f"{t['memory_s']:.4f},{t['collective_s']:.4f},"
+                  f"{t['dominant']},{t['roofline_fraction']:.3f},"
+                  f"{t['useful_flops_ratio']:.3f},"
+                  f"{t['hbm_fraction']:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

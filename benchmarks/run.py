@@ -1,0 +1,69 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale N] [--only name ...]
+
+Emits ``name,us_per_call,derived`` CSV on stdout.  Default scale=16
+(65K nodes, 1-2M edges per dataset) finishes on the 1-core CPU box in
+minutes; the paper's graphs are ~1000x larger and live in the dry-run /
+roofline analysis instead (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import Csv, suite
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=16)
+    ap.add_argument("--part-size", type=int, default=None,
+                    help="default: n/64 (paper-regime partition count)")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of: table4 fig8 table5 table6 fig12 "
+                         "table7 dist e2e")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    datasets = suite(args.scale)
+    from .common import default_part_size
+    if args.part_size is None:
+        args.part_size = default_part_size(1 << args.scale)
+    print(f"# suite scale={args.scale} part_size={args.part_size}: "
+          + ", ".join(f"{d.name}(n={d.n},m={d.m})" for d in datasets),
+          flush=True)
+    print("name,us_per_call,derived")
+
+    from . import (table4_runtime, fig8_comm, table5_locality,
+                   table6_comm_locality, fig12_partition_sweep,
+                   table7_preproc, dist_wire, pagerank_e2e)
+    jobs = {
+        "table4": lambda: table4_runtime.run(
+            datasets, part_size=args.part_size),
+        "fig8": lambda: fig8_comm.run(datasets,
+                                      part_size=args.part_size),
+        "table5": lambda: table5_locality.run(
+            datasets, part_size=args.part_size),
+        "table6": lambda: table6_comm_locality.run(
+            datasets[:3], part_size=args.part_size),
+        "fig12": lambda: fig12_partition_sweep.run(datasets[:2]),
+        "table7": lambda: table7_preproc.run(
+            datasets, part_size=args.part_size),
+        "dist": lambda: dist_wire.run(datasets),
+        "e2e": lambda: pagerank_e2e.run(datasets[:2],
+                                        part_size=args.part_size),
+    }
+    selected = args.only or list(jobs)
+    out = Csv()
+    for name in selected:
+        print(f"# --- {name} ---", flush=True)
+        out.extend(jobs[name]())
+    print(f"# total {time.time() - t0:.0f}s, {len(out.rows)} rows",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Paper Table IV + Fig 7: per-iteration runtime and GTEPS for
+PDPR / BVGAS / PCPM, with the scatter/gather phase split.
+
+The phase split uses the two-phase engine (bins round-trip through
+memory, like the paper's bins round-trip through DRAM); the headline
+per-iteration time uses the production fused engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spmv import (SpMVEngine, bvgas_scatter, bvgas_gather,
+                             pcpm_scatter, pcpm_gather)
+from .common import Csv, Dataset, timeit
+
+
+def _phase_times(eng: SpMVEngine, x) -> tuple[float, float]:
+    if eng.method == "bvgas":
+        scatter = lambda: jax.block_until_ready(
+            bvgas_scatter(eng._bv.src, x))
+        bins = bvgas_scatter(eng._bv.src, x)
+        gather = lambda: jax.block_until_ready(
+            bvgas_gather(bins, eng._bv.dst, num_nodes=eng.num_nodes))
+    elif eng.method == "pcpm":
+        scatter = lambda: jax.block_until_ready(
+            pcpm_scatter(eng._png.update_src, x))
+        bins = pcpm_scatter(eng._png.update_src, x)
+        gather = lambda: jax.block_until_ready(
+            pcpm_gather(bins, eng._png.edge_update_idx, eng._png.edge_dst,
+                        num_nodes=eng.num_nodes))
+    else:
+        return 0.0, 0.0
+    return timeit(scatter), timeit(gather)
+
+
+def run(datasets: list[Dataset], *, part_size: int = 65536,
+        phases: bool = True) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        x = jnp.asarray(
+            np.random.default_rng(0).random(ds.n).astype(np.float32))
+        for method in ("pdpr", "bvgas", "pcpm"):
+            eng = SpMVEngine(ds.graph, method=method, part_size=part_size)
+            t = timeit(lambda: jax.block_until_ready(eng(x)))
+            gteps = ds.m / t / 1e9
+            csv.add(f"table4/{ds.name}/{method}/iter", t,
+                    f"GTEPS={gteps:.3f}")
+            if phases and method != "pdpr":
+                ts, tg = _phase_times(eng, x)
+                csv.add(f"table4/{ds.name}/{method}/scatter", ts)
+                csv.add(f"table4/{ds.name}/{method}/gather", tg)
+            if method == "pcpm":
+                csv.add(f"table4/{ds.name}/pcpm/r", 0.0,
+                        f"r={eng.compression_ratio:.2f}")
+    return csv

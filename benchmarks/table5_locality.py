@@ -1,0 +1,33 @@
+"""Paper Table V + §VI-D1: node labeling vs compression ratio r.
+
+GOrder is approximated by our hybrid (degree-bucketed BFS) ordering —
+the paper's finding to reproduce is the DIRECTION: locality-optimized
+labels raise r, and PCPM converts that into fewer bytes while BVGAS is
+oblivious (validated in table6).
+"""
+from __future__ import annotations
+
+from repro.core.partition import Partitioning
+from repro.core.png import build_png
+from repro.graphs import reorder
+from .common import Csv, Dataset, timeit
+
+
+ORDERINGS = {
+    "orig": None,
+    "degree": reorder.degree_order,
+    "hybrid": reorder.hybrid_order,
+}
+
+
+def run(datasets: list[Dataset], *, part_size: int = 65536) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        part = Partitioning(ds.n, part_size)
+        for name, fn in ORDERINGS.items():
+            g = ds.graph if fn is None else ds.graph.relabel(fn(ds.graph))
+            layout = build_png(g, part)
+            csv.add(f"table5/{ds.name}/{name}", 0.0,
+                    f"r={layout.compression_ratio:.2f}"
+                    f",E'={layout.num_updates}")
+    return csv

@@ -1,0 +1,40 @@
+"""Paper Table VI: impact of locality-optimized labeling on
+communication (and therefore runtime) for PDPR / BVGAS / PCPM.
+
+Per (dataset, labeling, method): the analytic model bytes (with the
+measured r of that labeling) and the measured per-iteration time.  The
+paper's claims: BVGAS flat under relabeling; PDPR and PCPM improve.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm_model import (ModelParams, pdpr_bytes, bvgas_bytes,
+                                   pcpm_bytes)
+from repro.core.spmv import SpMVEngine
+from repro.graphs import reorder
+from .common import Csv, Dataset, timeit
+
+
+def run(datasets: list[Dataset], *, part_size: int = 65536) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        for label in ("orig", "hybrid"):
+            g = (ds.graph if label == "orig"
+                 else ds.graph.relabel(reorder.hybrid_order(ds.graph)))
+            x = jnp.asarray(
+                np.random.default_rng(0).random(ds.n).astype(np.float32))
+            engs = {m: SpMVEngine(g, method=m, part_size=part_size)
+                    for m in ("pdpr", "bvgas", "pcpm")}
+            r = engs["pcpm"].compression_ratio
+            k = engs["pcpm"].partitioning.num_partitions
+            pm = ModelParams(ds.n, ds.m, k, r)
+            model = {"pdpr": pdpr_bytes(pm), "bvgas": bvgas_bytes(pm),
+                     "pcpm": pcpm_bytes(pm)}
+            for m, eng in engs.items():
+                t = timeit(lambda: jax.block_until_ready(eng(x)))
+                csv.add(f"table6/{ds.name}/{label}/{m}", t,
+                        f"modelGB={model[m] / 1e9:.3f},r={r:.2f}")
+    return csv

@@ -1,0 +1,29 @@
+"""Paper Table VII: pre-processing time.
+
+PDPR needs a CSC sort; BVGAS needs the dst-partition-major sort; PCPM
+additionally builds the PNG (compress+transpose).  The paper's claim:
+PCPM pre-processing > BVGAS > PDPR(=0 given CSR), and it amortizes
+within one PageRank run.
+"""
+from __future__ import annotations
+
+from repro.core.partition import Partitioning
+from repro.core.png import build_png
+from repro.core.spmv import DeviceCSC, DeviceBVGAS, DevicePNG
+from .common import Csv, Dataset, timeit
+
+
+def run(datasets: list[Dataset], *, part_size: int = 65536) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        part = Partitioning(ds.n, part_size)
+        t_csc = timeit(lambda: DeviceCSC.build(ds.graph),
+                       warmup=1, iters=3)
+        t_bv = timeit(lambda: DeviceBVGAS.build(ds.graph, part),
+                      warmup=1, iters=3)
+        t_png = timeit(lambda: build_png(ds.graph, part),
+                       warmup=1, iters=3)
+        csv.add(f"table7/{ds.name}/pdpr_csc", t_csc)
+        csv.add(f"table7/{ds.name}/bvgas_bins", t_bv)
+        csv.add(f"table7/{ds.name}/pcpm_png", t_png)
+    return csv

@@ -1,0 +1,63 @@
+"""Distributed PCPM PageRank over 8 (forced-host) devices.
+
+    PYTHONPATH=src python examples/distributed_pagerank.py
+
+The paper's §VII generalization as a first-class feature: vertices are
+sharded over a device mesh; each vertex's rank crosses the interconnect
+ONCE per destination shard (the PNG dedup) via a single all-to-all of
+compressed update buffers, instead of once per cross-shard edge
+(the edge-cut / distributed-BVGAS baseline).  Prints the wire-byte
+reduction and validates both engines against the dense oracle.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import generators
+from repro.core.distributed import (build_sharded_png,
+                                    pcpm_all_to_all_spmv, edge_cut_spmv,
+                                    pad_to_shards, distributed_pagerank)
+from repro.core.pagerank import pagerank_reference
+
+
+def main():
+    n_shards = jax.device_count()
+    mesh = jax.make_mesh((n_shards,), ("shards",))
+    g = generators.rmat(12, 16, seed=3)
+    print(f"graph n={g.num_nodes:,} m={g.num_edges:,} "
+          f"shards={n_shards}")
+
+    layout = build_sharded_png(g, n_shards)
+    d_v = 4
+    print(f"wire updates (PCPM):    {layout.wire_updates:,} "
+          f"({layout.wire_updates * d_v / 1e6:.2f} MB/iter)")
+    print(f"wire edges  (edge-cut): {layout.wire_edges:,} "
+          f"({layout.wire_edges * 2 * d_v / 1e6:.2f} MB/iter)")
+    print(f"wire compression r = {layout.wire_compression:.2f}x")
+
+    # SpMV correctness for both engines
+    A = np.zeros((g.num_nodes, g.num_nodes))
+    np.add.at(A, (g.src, g.dst), 1.0)
+    x = np.random.default_rng(0).random(g.num_nodes).astype(np.float32)
+    xp = jnp.asarray(pad_to_shards(x, layout))
+    y_pcpm = np.asarray(pcpm_all_to_all_spmv(layout, mesh, "shards")(xp))
+    y_ec = np.asarray(edge_cut_spmv(g, n_shards, mesh, "shards")(xp))
+    np.testing.assert_allclose(y_pcpm[:g.num_nodes], A.T @ x,
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(y_ec[:g.num_nodes], A.T @ x,
+                               rtol=2e-4, atol=1e-5)
+    print("both distributed engines match the dense oracle ✓")
+
+    pr = distributed_pagerank(g, mesh, "shards", num_iterations=15,
+                              layout=layout)
+    ref = pagerank_reference(g, num_iterations=15)
+    np.testing.assert_allclose(pr, ref, rtol=1e-3, atol=1e-7)
+    print("distributed PageRank matches the dense oracle ✓")
+
+
+if __name__ == "__main__":
+    main()

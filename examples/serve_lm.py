@@ -1,0 +1,51 @@
+"""Serve a small LM with continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Spins up the ServeEngine (fixed slot pool over one static KV cache),
+feeds it more requests than slots, and drains: slots free as requests
+finish and queued requests are admitted — the TPU-static reduction of a
+vLLM-style scheduler.  Greedy decoding is validated against a
+reference forward pass over the full sequence.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.models import transformer as tf
+from repro.serve.engine import ServeEngine, Request
+
+
+def main():
+    cfg = get("tinyllama-1.1b").scaled(n_layers=2, d_model=128,
+                                       n_heads=4, d_ff=256, vocab=512)
+    params = tf.init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch_slots=4, max_len=96)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab, 8).tolist(),
+                    max_new_tokens=12)
+            for i in range(10)]          # 10 requests, 4 slots
+    eng.run_until_drained(reqs)
+    assert all(r.done for r in reqs)
+    print(f"served {len(reqs)} requests over "
+          f"{eng.b} slots; generated "
+          f"{sum(len(r.generated) for r in reqs)} tokens")
+
+    # validate slot 0's greedy continuation against a full forward pass
+    r = reqs[0]
+    toks = list(r.prompt)
+    for _ in range(3):
+        logits, _ = tf.forward(params, cfg,
+                               jnp.asarray([toks], jnp.int32),
+                               attn_path="dense")
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert toks[len(r.prompt):] == r.generated[:3], \
+        (toks[len(r.prompt):], r.generated[:3])
+    print("continuous-batching output matches full-sequence forward ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end training driver: a ~100M-parameter LM with checkpointing,
+an injected mid-run failure, and bit-identical resume.
+
+    PYTHONPATH=src python examples/train_lm.py            # quick (CPU)
+    PYTHONPATH=src python examples/train_lm.py --full     # ~100M params
+
+Demonstrates the production path: mesh + logical sharding rules,
+gradient accumulation, atomic checkpoints, restart-after-failure, and
+the loss actually going down on the synthetic stream.
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+
+from repro.configs import get
+from repro.launch.train import build_step_and_state
+from repro.launch.mesh import make_host_mesh
+from repro.launch import sharding as shlib
+from repro.data.tokens import synthetic_lm_batches
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def run(cfg, steps, batch, seq, ckpt_dir, fail_at=None, resume=False):
+    mesh = make_host_mesh()
+    with shlib.use_rules(mesh), mesh:
+        step, state = build_step_and_state(cfg, total=steps * 10,
+                                           num_microbatches=2)
+        data = synthetic_lm_batches(cfg.vocab, batch, seq)
+
+        def failure_hook(s):
+            if fail_at is not None and s == fail_at:
+                raise RuntimeError(f"injected failure at step {s}")
+
+        tr = Trainer(TrainerConfig(total_steps=steps,
+                                   checkpoint_every=10,
+                                   ckpt_dir=ckpt_dir, log_every=10),
+                     step, state, data,
+                     failure_hook=failure_hook)
+        if resume:
+            tr.try_resume()
+        return tr.run()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, a few hundred steps (slow on "
+                         "a 1-core CPU; the TPU-shaped run)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-example-ckpt")
+    args = ap.parse_args()
+
+    base = get("tinyllama-1.1b")
+    if args.full:
+        # ~100M params: 12 layers, d_model 768, vocab 32000
+        cfg = dataclasses.replace(
+            base, name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, d_ff=2048, vocab=32000, head_dim=None)
+        steps, batch, seq = 300, 8, 512
+    else:
+        cfg = base.scaled(n_layers=4, d_model=256, n_heads=8,
+                          d_ff=512, vocab=2048)
+        steps, batch, seq = 60, 8, 128
+
+    n_params = cfg.param_count()
+    print(f"config {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"{steps} steps")
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    # ---- run with an injected failure at 60% of the way
+    fail_at = int(steps * 0.6)
+    try:
+        run(cfg, steps, batch, seq, args.ckpt_dir, fail_at=fail_at)
+        raise AssertionError("failure was not injected?")
+    except RuntimeError as e:
+        print(f"[expected] {e} — restarting from checkpoint")
+
+    # ---- restart: resumes from the last checkpoint and finishes
+    report = run(cfg, steps, batch, seq, args.ckpt_dir, resume=True)
+    losses = [m["loss"] for m in report["history"]]
+    print(f"finished at step {report['final_step']}; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print("loss decreased ✓  checkpoint/restart exercised ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from .base import (LMConfig, GNNConfig, RecSysConfig, ShapeSpec, get,
+                   all_archs, LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES)
+from . import (mixtral_8x7b, grok_1_314b, stablelm_1_6b, tinyllama_1_1b,
+               deepseek_67b, graphcast, nequip, mace, equiformer_v2, mind,
+               pagerank_kron)
+
+ALL_ARCHS = [
+    mixtral_8x7b.CONFIG, grok_1_314b.CONFIG, stablelm_1_6b.CONFIG,
+    tinyllama_1_1b.CONFIG, deepseek_67b.CONFIG, graphcast.CONFIG,
+    nequip.CONFIG, mace.CONFIG, equiformer_v2.CONFIG, mind.CONFIG,
+]
+PAGERANK = pagerank_kron.CONFIG
+
+__all__ = ["LMConfig", "GNNConfig", "RecSysConfig", "ShapeSpec", "get",
+           "all_archs", "ALL_ARCHS", "PAGERANK", "LM_SHAPES",
+           "GNN_SHAPES", "RECSYS_SHAPES"]

@@ -1,0 +1,15 @@
+from .partition import Partitioning, partition_for_vmem
+from .png import PNGLayout, BlockedPNG, build_png, block_png
+from .spmv import (SpMVEngine, pdpr_spmv, pcpm_spmv, pcpm_scatter,
+                   pcpm_gather, bvgas_scatter, bvgas_gather,
+                   pcpm_spmv_weighted, DevicePNG, DeviceCSC, DeviceBVGAS)
+from .pagerank import pagerank, pagerank_reference, PageRankResult
+from . import comm_model
+
+__all__ = [
+    "Partitioning", "partition_for_vmem", "PNGLayout", "BlockedPNG",
+    "build_png", "block_png", "SpMVEngine", "pdpr_spmv", "pcpm_spmv",
+    "pcpm_scatter", "pcpm_gather", "bvgas_scatter", "bvgas_gather",
+    "pcpm_spmv_weighted", "DevicePNG", "DeviceCSC", "DeviceBVGAS",
+    "pagerank", "pagerank_reference", "PageRankResult", "comm_model",
+]

@@ -1,0 +1,142 @@
+"""Bipartite Partition-Node Graph (PNG) layout — paper §IV-B.
+
+The PNG build *compresses* (dedup per (source node, destination
+partition)) and *transposes* (groups by destination partition) the edge
+set in the paper's two merged scans.  Host-side numpy pre-processing,
+exactly like the paper's pre-processing step (§VI-D3); the output is a
+set of flat, statically-shaped arrays consumable by XLA and by the
+Pallas kernel:
+
+  update_src[U]        source node of each deduplicated update,
+                       sorted by (dst_partition, src_partition, src)
+  update_offsets[k+1]  update range per destination partition
+  edge_update_idx[M]   per edge: index into the update stream
+  edge_dst[M]          per edge: global destination node id
+  edge_offsets[k+1]    edge range per destination partition
+
+The MSB/branch-avoidance trick (paper §IV-C) is replaced by the explicit
+``edge_update_idx`` stream — same 4 B/edge, branch-free, full 2^32 ID
+space (DESIGN.md §2).
+
+Compression ratio r = M / U is the paper's central statistic (table V).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graphs.formats import Graph
+from .partition import Partitioning
+
+
+@dataclasses.dataclass(frozen=True)
+class PNGLayout:
+    partitioning: Partitioning
+    update_src: np.ndarray       # (U,) int32
+    update_offsets: np.ndarray   # (k+1,) int64
+    edge_update_idx: np.ndarray  # (M,) int32
+    edge_dst: np.ndarray         # (M,) int32
+    edge_offsets: np.ndarray     # (k+1,) int64
+    num_nodes: int
+    num_edges: int
+
+    @property
+    def num_updates(self) -> int:
+        return int(self.update_src.shape[0])
+
+    @property
+    def num_partitions(self) -> int:
+        return self.partitioning.num_partitions
+
+    @property
+    def compression_ratio(self) -> float:
+        """r = |E| / |E'| (paper table V)."""
+        return self.num_edges / max(self.num_updates, 1)
+
+    # ------------------------------------------------------- comm model
+    def model_bytes(self, *, d_i: int = 4, d_v: int = 4) -> dict:
+        """Per-iteration DRAM/HBM byte model, eq. (5) of the paper,
+        instantiated with the *actual* U and M of this layout."""
+        n, m, u, k = (self.num_nodes, self.num_edges, self.num_updates,
+                      self.num_partitions)
+        scatter = n * d_v + u * d_v + (k * k + u) * d_i
+        gather = m * d_i + u * d_v + n * d_v
+        return {"scatter": scatter, "gather": gather,
+                "total": scatter + gather}
+
+
+def build_png(g: Graph, part: Partitioning) -> PNGLayout:
+    """Merged compress+transpose build (paper §IV-B, two scans)."""
+    dstp = (g.dst.astype(np.int64) // part.part_size)
+    # Scan 1: sort edges by (dst_partition, src, dst) — the transposed,
+    # destination-partition-major order the scatter phase streams in.
+    order = np.lexsort((g.dst, g.src, dstp))
+    src_s = g.src[order]
+    dst_s = g.dst[order]
+    dstp_s = dstp[order]
+    # Scan 2: dedup (dst_partition, src) pairs → the update stream.
+    pair_key = dstp_s * np.int64(g.num_nodes) + src_s
+    # pair_key is already sorted (lexsort above) → run-length dedup.
+    new_update = np.empty(len(pair_key), dtype=bool)
+    if len(pair_key):
+        new_update[0] = True
+        np.not_equal(pair_key[1:], pair_key[:-1], out=new_update[1:])
+    edge_update_idx = (np.cumsum(new_update) - 1).astype(np.int32)
+    update_src = src_s[new_update].astype(np.int32)
+    update_dstp = dstp_s[new_update]
+
+    k = part.num_partitions
+    update_offsets = np.zeros(k + 1, dtype=np.int64)
+    np.add.at(update_offsets, update_dstp + 1, 1)
+    np.cumsum(update_offsets, out=update_offsets)
+    edge_offsets = np.zeros(k + 1, dtype=np.int64)
+    np.add.at(edge_offsets, dstp_s + 1, 1)
+    np.cumsum(edge_offsets, out=edge_offsets)
+
+    return PNGLayout(part, update_src, update_offsets, edge_update_idx,
+                     dst_s.astype(np.int32), edge_offsets,
+                     g.num_nodes, g.num_edges)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (per-partition padded) view — execution schedule of the paper &
+# input format of the Pallas kernel.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockedPNG:
+    """PNG re-laid-out as dense (k, max_*) blocks with padding.
+
+    Pad entries have update value slot U (an extra zero row) and dst_local
+    slot part_size (an extra accumulator row) so they are mathematically
+    inert without branches — the static-shape analogue of the paper's
+    deterministic layout.
+    """
+    part_size: int
+    update_src: np.ndarray       # (k, max_u) int32, pad = -1
+    edge_update_local: np.ndarray  # (k, max_e) int32 into partition updates,
+                                   # pad = max_u (extra zero row)
+    edge_dst_local: np.ndarray   # (k, max_e) int32, pad = part_size
+    update_pad_frac: float
+    edge_pad_frac: float
+
+
+def block_png(layout: PNGLayout) -> BlockedPNG:
+    k = layout.num_partitions
+    psz = layout.partitioning.part_size
+    u_cnt = np.diff(layout.update_offsets)
+    e_cnt = np.diff(layout.edge_offsets)
+    max_u = max(int(u_cnt.max(initial=0)), 1)
+    max_e = max(int(e_cnt.max(initial=0)), 1)
+    up = np.full((k, max_u), -1, dtype=np.int32)
+    eu = np.full((k, max_e), max_u, dtype=np.int32)
+    ed = np.full((k, max_e), psz, dtype=np.int32)
+    for p in range(k):
+        us, ue = layout.update_offsets[p], layout.update_offsets[p + 1]
+        es, ee = layout.edge_offsets[p], layout.edge_offsets[p + 1]
+        up[p, :ue - us] = layout.update_src[us:ue]
+        eu[p, :ee - es] = layout.edge_update_idx[es:ee] - us
+        ed[p, :ee - es] = layout.edge_dst[es:ee] - p * psz
+    u_pad = 1.0 - layout.num_updates / max(k * max_u, 1)
+    e_pad = 1.0 - layout.num_edges / max(k * max_e, 1)
+    return BlockedPNG(psz, up, eu, ed, u_pad, e_pad)

@@ -1,0 +1,191 @@
+"""The three SpMV engines from the paper, in JAX.
+
+All compute  y = A^T @ x  for the (possibly multi-)vector x — PageRank
+uses x = scaled ranks, GNNs use x = node features (n, d).
+
+- ``pdpr``  : pull-direction baseline (alg. 1) — per-destination gather
+              of source values, i.e. segment-sum over CSC order.
+- ``bvgas`` : Binning w/ Vertex-centric GAS (alg. 2) — scatter phase
+              materializes one update PER EDGE into dst-partition-major
+              bins; gather phase segment-sums them.
+- ``pcpm``  : Partition-Centric (algs. 4+5) — scatter phase materializes
+              one update PER (src, dst-partition) pair (the PNG update
+              stream, m/r entries); gather expands updates over edges via
+              the ``edge_update_idx`` stream and segment-sums.
+
+The two-phase engines intentionally keep scatter and gather as separate
+jitted stages so the bins round-trip through HBM exactly as the paper's
+bins round-trip through DRAM; ``fused=True`` collapses them into one XLA
+program (a beyond-paper optimization measured in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.formats import Graph
+from .partition import Partitioning
+from .png import PNGLayout, build_png
+
+
+# ---------------------------------------------------------------------------
+# Device-resident layouts
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DeviceCSC:
+    """Edges sorted by destination (pull order)."""
+    num_nodes: int
+    src: jnp.ndarray   # (m,) int32, sorted by dst
+    dst: jnp.ndarray   # (m,) int32, ascending
+
+    @staticmethod
+    def build(g: Graph) -> "DeviceCSC":
+        order = np.lexsort((g.src, g.dst))
+        return DeviceCSC(g.num_nodes, jnp.asarray(g.src[order]),
+                         jnp.asarray(g.dst[order]))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBVGAS:
+    """Edges sorted by destination partition (BVGAS deterministic layout:
+    dst ids are written once, then reused every iteration)."""
+    num_nodes: int
+    src: jnp.ndarray   # (m,) int32, dst-partition-major
+    dst: jnp.ndarray   # (m,) int32
+
+    @staticmethod
+    def build(g: Graph, part: Partitioning) -> "DeviceBVGAS":
+        dstp = g.dst.astype(np.int64) // part.part_size
+        order = np.lexsort((g.dst, g.src, dstp))
+        return DeviceBVGAS(g.num_nodes, jnp.asarray(g.src[order]),
+                           jnp.asarray(g.dst[order]))
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePNG:
+    """Flat PNG streams on device (see core/png.py)."""
+    num_nodes: int
+    update_src: jnp.ndarray       # (U,) int32
+    edge_update_idx: jnp.ndarray  # (M,) int32
+    edge_dst: jnp.ndarray         # (M,) int32
+    compression_ratio: float
+
+    @staticmethod
+    def build(g: Graph, part: Partitioning,
+              layout: PNGLayout | None = None) -> "DevicePNG":
+        layout = layout or build_png(g, part)
+        return DevicePNG(layout.num_nodes,
+                         jnp.asarray(layout.update_src),
+                         jnp.asarray(layout.edge_update_idx),
+                         jnp.asarray(layout.edge_dst),
+                         layout.compression_ratio)
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("num_nodes",))
+def pdpr_spmv(src: jnp.ndarray, dst: jnp.ndarray, x: jnp.ndarray,
+              *, num_nodes: int) -> jnp.ndarray:
+    """Pull-direction SpMV: y[v] = sum_{(u,v) in E} x[u]."""
+    return jax.ops.segment_sum(x[src], dst, num_segments=num_nodes)
+
+
+@partial(jax.jit, static_argnames=())
+def bvgas_scatter(src: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Scatter: one update per edge, written to dst-partition-major bins."""
+    return x[src]
+
+
+@partial(jax.jit, static_argnames=("num_nodes",))
+def bvgas_gather(bins: jnp.ndarray, dst: jnp.ndarray,
+                 *, num_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(bins, dst, num_segments=num_nodes)
+
+
+@partial(jax.jit, static_argnames=())
+def pcpm_scatter(update_src: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Scatter: ONE update per (src, dst-partition) — the PNG compression.
+    Update bins are m/r entries instead of m."""
+    return x[update_src]
+
+
+@partial(jax.jit, static_argnames=("num_nodes",))
+def pcpm_gather(update_bins: jnp.ndarray, edge_update_idx: jnp.ndarray,
+                edge_dst: jnp.ndarray, *, num_nodes: int) -> jnp.ndarray:
+    """Gather: expand each update over its in-partition destinations
+    (branch-free analogue of the MSB stream) and accumulate."""
+    return jax.ops.segment_sum(update_bins[edge_update_idx], edge_dst,
+                               num_segments=num_nodes)
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "fused"))
+def pcpm_spmv(png_update_src, png_edge_update_idx, png_edge_dst, x,
+              *, num_nodes: int, fused: bool = True) -> jnp.ndarray:
+    bins = pcpm_scatter(png_update_src, x)
+    return pcpm_gather(bins, png_edge_update_idx, png_edge_dst,
+                       num_nodes=num_nodes)
+
+
+# Weighted variant (paper §VII extension: weights travel with dest IDs).
+@partial(jax.jit, static_argnames=("num_nodes",))
+def pcpm_spmv_weighted(png_update_src, png_edge_update_idx, png_edge_dst,
+                       edge_weight, x, *, num_nodes: int) -> jnp.ndarray:
+    bins = x[png_update_src]
+    vals = bins[png_edge_update_idx]
+    if x.ndim > 1:
+        vals = vals * edge_weight[:, None]
+    else:
+        vals = vals * edge_weight
+    return jax.ops.segment_sum(vals, png_edge_dst, num_segments=num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Engine wrapper with a uniform API
+# ---------------------------------------------------------------------------
+class SpMVEngine:
+    """y = A^T x with a fixed graph; `method` in {pdpr, bvgas, pcpm}."""
+
+    def __init__(self, g: Graph, *, method: str = "pcpm",
+                 part_size: int = 65536, two_phase: bool = False):
+        self.method = method
+        self.num_nodes = g.num_nodes
+        self.num_edges = g.num_edges
+        self.two_phase = two_phase
+        part = Partitioning(g.num_nodes, part_size)
+        self.partitioning = part
+        if method == "pdpr":
+            self._csc = DeviceCSC.build(g)
+        elif method == "bvgas":
+            self._bv = DeviceBVGAS.build(g, part)
+        elif method == "pcpm":
+            self.layout = build_png(g, part)
+            self._png = DevicePNG.build(g, part, self.layout)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+
+    @property
+    def compression_ratio(self) -> float:
+        if self.method == "pcpm":
+            return self._png.compression_ratio
+        return 1.0
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.method == "pdpr":
+            return pdpr_spmv(self._csc.src, self._csc.dst, x,
+                             num_nodes=self.num_nodes)
+        if self.method == "bvgas":
+            bins = bvgas_scatter(self._bv.src, x)
+            if self.two_phase:
+                bins = jax.block_until_ready(bins)
+            return bvgas_gather(bins, self._bv.dst,
+                                num_nodes=self.num_nodes)
+        bins = pcpm_scatter(self._png.update_src, x)
+        if self.two_phase:
+            bins = jax.block_until_ready(bins)
+        return pcpm_gather(bins, self._png.edge_update_idx,
+                           self._png.edge_dst, num_nodes=self.num_nodes)

@@ -1,0 +1,4 @@
+from .tokens import synthetic_lm_batches
+from .graphdata import graph_for_shape, batch_for_shape
+
+__all__ = ["synthetic_lm_batches", "graph_for_shape", "batch_for_shape"]

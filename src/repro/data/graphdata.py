@@ -1,0 +1,34 @@
+"""Graph data for the assigned GNN shape regimes."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..configs.base import ShapeSpec
+from ..graphs import generators
+from ..graphs.sampler import sample_neighbors, _max_nodes
+from ..models.gnn import GraphBatch, random_graph_batch
+
+
+def graph_for_shape(shape: ShapeSpec, *, seed: int = 0):
+    """A synthetic stand-in graph with the shape's node/edge counts."""
+    return generators.uniform_random(shape.n_nodes, shape.n_edges,
+                                     seed=seed)
+
+
+def batch_for_shape(shape: ShapeSpec, *, seed: int = 0,
+                    d_feat: int | None = None,
+                    n_classes: int = 16) -> GraphBatch:
+    rng = np.random.default_rng(seed)
+    d = d_feat or shape.d_feat
+    if shape.kind == "batched_graphs":
+        return random_graph_batch(
+            rng, shape.n_nodes * shape.global_batch,
+            shape.n_edges * shape.global_batch, d,
+            n_graphs=shape.global_batch, n_classes=n_classes)
+    if shape.kind == "minibatch":
+        n = _max_nodes(shape.batch_nodes, shape.fanout)
+        e = sum(shape.batch_nodes * int(np.prod(shape.fanout[:i + 1]))
+                for i in range(len(shape.fanout)))
+        return random_graph_batch(rng, n, e, d, n_classes=n_classes)
+    return random_graph_batch(rng, shape.n_nodes, shape.n_edges, d,
+                              n_classes=n_classes)

@@ -1,0 +1,36 @@
+"""Deterministic synthetic LM data pipeline.
+
+Token streams are a keyed hash of (stream seed, step, position) so any
+worker can materialize its shard of any batch independently — the
+restart/elastic property the trainer relies on (no data-loader state to
+checkpoint beyond the step counter).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _hash_tokens(seed: int, step: int, batch: int, seq: int,
+                 vocab: int) -> np.ndarray:
+    # splitmix64-style mixing, vectorized
+    with np.errstate(over="ignore"):
+        idx = (np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15)
+               + np.uint64(step) * np.uint64(0xBF58476D1CE4E5B9)
+               + np.arange(batch * seq, dtype=np.uint64))
+    z = idx
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return (z % np.uint64(vocab)).astype(np.int32).reshape(batch, seq)
+
+
+def synthetic_lm_batches(vocab: int, batch: int, seq: int, *,
+                         seed: int = 0, start_step: int = 0):
+    """Infinite iterator of {tokens, labels} (labels = next token)."""
+    step = start_step
+    while True:
+        toks = _hash_tokens(seed, step, batch, seq + 1, vocab)
+        yield {"tokens": jnp.asarray(toks[:, :-1]),
+               "labels": jnp.asarray(toks[:, 1:])}
+        step += 1

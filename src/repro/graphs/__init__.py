@@ -1,0 +1,5 @@
+from .formats import Graph, from_edge_list
+from . import generators, reorder, sampler, io
+
+__all__ = ["Graph", "from_edge_list", "generators", "reorder", "sampler",
+           "io"]

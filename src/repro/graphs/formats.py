@@ -1,0 +1,87 @@
+"""Graph containers.
+
+Host-side (numpy) representations used for pre-processing — CSR build,
+partitioning, PNG construction — plus device (jnp) views for compute.
+The paper assumes CSR is given (§VI-D3); we build it once at load time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Directed graph in COO form with lazily-built CSR/CSC views.
+
+    ``src``/``dst`` are int32 numpy arrays of equal length (one entry per
+    edge).  Self-loops and multi-edges are permitted (multi-edges matter:
+    PNG compression dedups (src, dst-partition) pairs, and we report the
+    achieved compression ratio r against the raw edge count, as the paper
+    does).
+    """
+
+    num_nodes: int
+    src: np.ndarray
+    dst: np.ndarray
+
+    def __post_init__(self):
+        assert self.src.dtype == np.int32 and self.dst.dtype == np.int32
+        assert self.src.shape == self.dst.shape
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    # ---------------------------------------------------------------- CSR
+    @cached_property
+    def csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """(offsets[n+1], indices[m]) with edges sorted by src then dst."""
+        order = np.lexsort((self.dst, self.src))
+        offsets = np.zeros(self.num_nodes + 1, dtype=np.int64)
+        np.add.at(offsets, self.src + 1, 1)
+        np.cumsum(offsets, out=offsets)
+        return offsets, self.dst[order].astype(np.int32)
+
+    @cached_property
+    def csc(self) -> tuple[np.ndarray, np.ndarray]:
+        """(offsets[n+1], indices[m]) with edges sorted by dst then src."""
+        order = np.lexsort((self.src, self.dst))
+        offsets = np.zeros(self.num_nodes + 1, dtype=np.int64)
+        np.add.at(offsets, self.dst + 1, 1)
+        np.cumsum(offsets, out=offsets)
+        return offsets, self.src[order].astype(np.int32)
+
+    @cached_property
+    def out_degree(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        np.add.at(deg, self.src, 1)
+        return deg
+
+    @cached_property
+    def in_degree(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        np.add.at(deg, self.dst, 1)
+        return deg
+
+    # ------------------------------------------------------------- device
+    def device_coo(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        return jnp.asarray(self.src), jnp.asarray(self.dst)
+
+    def relabel(self, perm: np.ndarray) -> "Graph":
+        """Apply a node relabeling: new_id = perm[old_id]."""
+        perm = perm.astype(np.int32)
+        return Graph(self.num_nodes, perm[self.src], perm[self.dst])
+
+    def reverse(self) -> "Graph":
+        return Graph(self.num_nodes, self.dst, self.src)
+
+
+def from_edge_list(num_nodes: int, edges: np.ndarray) -> Graph:
+    """edges: (m, 2) array of (src, dst)."""
+    e = np.asarray(edges, dtype=np.int32)
+    return Graph(num_nodes, np.ascontiguousarray(e[:, 0]),
+                 np.ascontiguousarray(e[:, 1]))

@@ -1,0 +1,15 @@
+"""Graph persistence (npz)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .formats import Graph
+
+
+def save(path: str, g: Graph) -> None:
+    np.savez_compressed(path, num_nodes=g.num_nodes, src=g.src, dst=g.dst)
+
+
+def load(path: str) -> Graph:
+    z = np.load(path)
+    return Graph(int(z["num_nodes"]), z["src"], z["dst"])

@@ -1,0 +1,3 @@
+from . import pcpm_spmv, embedding_bag, flash_attention
+
+__all__ = ["pcpm_spmv", "embedding_bag", "flash_attention"]

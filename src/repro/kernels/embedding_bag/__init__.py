@@ -1,0 +1,5 @@
+from .kernel import embedding_bag_pallas
+from .ops import embedding_bag
+from .ref import embedding_bag_ref
+
+__all__ = ["embedding_bag_pallas", "embedding_bag", "embedding_bag_ref"]

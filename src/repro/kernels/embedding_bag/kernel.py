@@ -1,0 +1,72 @@
+"""EmbeddingBag (sum) as a Pallas TPU kernel.
+
+The recsys hot path (DESIGN.md §4): lookup = SpMV with a 0/1 (or
+weighted) selection matrix — the same partition-centric structure as
+PCPM.  The vocab axis is tiled (a table tile is the VMEM-resident
+"partition"); each bag block builds a one-hot selection matrix against
+the resident tile and multiplies on the MXU — gather-as-matmul, the
+same adaptation as the PCPM gather (no random access ever leaves VMEM).
+
+Grid: (bag_blocks, vocab_tiles); vocab innermost so the (Bb, d) output
+accumulator stays resident in VMEM.
+
+  table: (V, d)     — tiled (Vt, d)
+  idx:   (B, L)     — tiled (Bb, L), pad entries >= V
+  w:     (B, L)     — per-sample weights
+  out:   (B, d)     — tiled (Bb, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(idx_ref, w_ref, table_ref, out_ref, *, vocab_tile: int):
+    vt = pl.program_id(1)
+
+    @pl.when(vt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]                  # (Bb, L)
+    w = w_ref[...]                      # (Bb, L)
+    tile = table_ref[...]               # (Vt, d)
+    local = idx - vt * vocab_tile       # in-tile position or out of range
+    # selection matrix (Bb, Vt): sum_l w[b,l] * onehot(local[b,l])
+    iota_v = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vocab_tile), 2)
+    oh = (local[:, :, None] == iota_v).astype(tile.dtype)   # (Bb, L, Vt)
+    sel = jnp.einsum("bl,blv->bv", w, oh)
+    out_ref[...] += jax.lax.dot(sel, tile,
+                                preferred_element_type=jnp.float32
+                                ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bag_block", "vocab_tile",
+                                             "interpret"))
+def embedding_bag_pallas(table: jnp.ndarray, idx: jnp.ndarray,
+                         weights: jnp.ndarray | None = None, *,
+                         bag_block: int = 8, vocab_tile: int = 512,
+                         interpret: bool = True) -> jnp.ndarray:
+    v, d = table.shape
+    b, l = idx.shape
+    assert v % vocab_tile == 0, "pad table to vocab_tile multiple"
+    assert b % bag_block == 0, "pad batch to bag_block multiple"
+    if weights is None:
+        weights = jnp.ones_like(idx, dtype=table.dtype)
+    # pad idx >= V contributes nothing (never matches an in-tile iota)
+    grid = (b // bag_block, v // vocab_tile)
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, vocab_tile=vocab_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bag_block, l), lambda bb, vt: (bb, 0)),
+            pl.BlockSpec((bag_block, l), lambda bb, vt: (bb, 0)),
+            pl.BlockSpec((vocab_tile, d), lambda bb, vt: (vt, 0)),
+        ],
+        out_specs=pl.BlockSpec((bag_block, d), lambda bb, vt: (bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(idx, weights, table)

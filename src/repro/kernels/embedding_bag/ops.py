@@ -1,0 +1,44 @@
+"""Jit'd embedding-bag wrapper with padding + production (XLA) fallback.
+
+``embedding_bag`` picks the execution path:
+  - "xla":    take + einsum (best for huge, HBM-resident tables — XLA
+              emits a dynamic-gather; this is the production default)
+  - "pallas": the MXU one-hot kernel (VMEM-resident table shards; used
+              when the table shard fits VMEM, e.g. post-PCPM-dedup
+              lookups on a model-parallel shard)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("path", "interpret"))
+def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray,
+                  weights: jnp.ndarray | None = None, *,
+                  path: str = "xla", interpret: bool = True) -> jnp.ndarray:
+    if path == "xla":
+        return embedding_bag_ref(table, idx, weights)
+    v, d = table.shape
+    b, l = idx.shape
+    v_pad = _round_up(v, 512)
+    b_pad = _round_up(b, 8)
+    d_pad = _round_up(d, 128)
+    tbl = jnp.pad(table, ((0, v_pad - v), (0, d_pad - d)))
+    # out-of-range pad indices select nothing in every tile
+    ix = jnp.pad(idx, ((0, b_pad - b), (0, 0)), constant_values=v_pad)
+    ix = jnp.where(ix >= v, v_pad, ix)  # original pads too
+    w = None
+    if weights is not None:
+        w = jnp.pad(weights, ((0, b_pad - b), (0, 0)))
+    out = embedding_bag_pallas(tbl, ix, w, interpret=interpret)
+    return out[:b, :d]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for embedding_bag (sum mode, optional weights).
+
+JAX has no native EmbeddingBag (kernel_taxonomy §RecSys): the reference
+is gather + weighted sum; pad slots are signaled by idx >= vocab.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                      weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """table: (V, d); idx: (B, L) int32 (pad = V); weights: (B, L) or None.
+    Returns (B, d) = sum_l w[b,l] * table[idx[b,l]]."""
+    v, _ = table.shape
+    valid = (idx < v).astype(table.dtype)
+    w = valid if weights is None else weights * valid
+    rows = table[jnp.clip(idx, 0, v - 1)]            # (B, L, d)
+    return jnp.einsum("bl,bld->bd", w, rows)

@@ -1,0 +1,5 @@
+from .kernel import flash_attention_pallas
+from .ops import attention
+from .ref import mha_ref
+
+__all__ = ["flash_attention_pallas", "attention", "mha_ref"]

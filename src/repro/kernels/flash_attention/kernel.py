@@ -1,0 +1,123 @@
+"""FlashAttention (tiled online softmax) Pallas TPU kernel.
+
+Causal + sliding-window (Mistral/Mixtral SWA) masks, GQA via BlockSpec
+index_map (kv head = q head // group — no jnp.repeat materialization).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks), kv innermost.  Running
+(m, l, acc) state lives in VMEM scratch and is normalized into the
+output block at the last kv step.  Fully-masked kv blocks are skipped
+with pl.when (the causal/SWA block-diagonal band is the only work done —
+this is the FLOP-side win over masked dense attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, kv_len: int, q_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip: q rows [q0, q0+Bq), kv cols [k0, k0+Bk)
+    q0 = qi * block_q + q_offset          # global key-aligned q position
+    k0 = ki * block_k
+    run = jnp.bool_(True)
+    if causal:
+        run &= k0 <= q0 + block_q - 1             # some key <= some query
+    if window is not None:
+        run &= k0 + block_k - 1 > q0 - window     # inside the band
+    run &= k0 < kv_len
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)       # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 0)
+        k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                        # (Bq, 1) replicated
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # (Bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)   # (Bq, Bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "kv_len", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, window: int | None = None,
+                           kv_len: int | None = None, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D), Sq % Bq == Skv % Bk == 0."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0 and sq % block_q == 0 and skv % block_k == 0
+    group = hq // hkv
+    kv_len = skv if kv_len is None else kv_len
+    grid = (b, hq, sq // block_q, skv // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (d ** 0.5), causal=causal,
+        window=window, block_q=block_q, block_k=block_k, kv_len=kv_len,
+        q_offset=skv - sq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

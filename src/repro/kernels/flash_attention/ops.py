@@ -1,0 +1,45 @@
+"""Jit'd attention wrapper: (B, S, H, D) layout, padding, GQA, and the
+path switch between the Pallas kernel (TPU target) and the XLA reference
+(CPU / decode shapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import mha_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "path",
+                                             "interpret", "block_q",
+                                             "block_k"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int | None = None,
+              path: str = "xla", interpret: bool = True,
+              block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if path == "xla":
+        out = mha_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        b, hq, sq, d = qt.shape
+        skv = kt.shape[2]
+        sq_p = _round_up(sq, block_q)
+        skv_p = _round_up(skv, block_k)
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, window=window, kv_len=skv,
+            block_q=block_q, block_k=block_k, interpret=interpret)
+        out = out[:, :, :sq, :]
+    return out.transpose(0, 2, 1, 3)

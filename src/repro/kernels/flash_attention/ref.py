@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: masked multi-head attention with GQA + sliding window."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, window: int | None = None,
+            kv_len: int | None = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Hq % Hkv == 0.
+
+    window = sliding-window size (Mistral-style: key j visible to query i
+    iff i - window < j <= i).  kv_len masks padded kv positions.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)  # align ends (decode)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((1, 1, sq, skv), dtype=bool)
+    if causal:
+        mask &= (k_pos <= q_pos)[None, None]
+    if window is not None:
+        mask &= (k_pos > q_pos - window)[None, None]
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim == 0:
+            mask &= (k_pos < kv_len)[None, None]
+        else:  # per-batch kv lengths (continuous batching)
+            mask = mask & (k_pos[None] < kv_len[:, None, None])[:, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

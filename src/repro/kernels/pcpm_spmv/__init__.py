@@ -1,0 +1,6 @@
+from .kernel import pcpm_gather_pallas
+from .ops import PackedPNG, pack_blocked, pcpm_spmv_pallas
+from .ref import pcpm_gather_ref
+
+__all__ = ["pcpm_gather_pallas", "PackedPNG", "pack_blocked",
+           "pcpm_spmv_pallas", "pcpm_gather_ref"]

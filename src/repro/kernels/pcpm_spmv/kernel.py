@@ -1,0 +1,86 @@
+"""PCPM gather phase as a Pallas TPU kernel.
+
+TPU-native adaptation of paper alg. 5 (see DESIGN.md §2):
+
+- one destination partition's accumulator lives in VMEM for the whole
+  pass (the paper's cache-resident partition);
+- the update bin for that partition is VMEM-resident (paper: bins are
+  streamed; here a partition's compressed bin fits VMEM because it is
+  m/r-sized);
+- the per-edge (update_idx, dst_local) streams are consumed in blocks;
+- BOTH the update gather and the destination scatter are expressed as
+  one-hot matmuls on the MXU — the branch-free replacement for the
+  paper's MSB pointer trick (TPU vector lanes have no cheap data-
+  dependent branch; redundant MXU FLOPs are free relative to HBM).
+
+Grid: (num_partitions, num_edge_blocks); edge blocks iterate innermost
+so the accumulator block is revisited (Pallas keeps it in VMEM across
+consecutive grid steps with the same index_map output).
+
+Shapes (all static, built by core.png.block_png + ops.pack_blocked):
+  bins:        (k, U, d)   per-partition compressed update values
+  edge_upd:    (k, E_blocks, Eb) int32, pad = U   (one-hot row -> 0)
+  edge_dst:    (k, E_blocks, Eb) int32, pad = P   (one-hot row -> 0)
+  out:         (k, P, d)   per-partition accumulated values
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(edge_upd_ref, edge_dst_ref, bins_ref, out_ref, *,
+                   part_size: int, num_updates: int):
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    upd_idx = edge_upd_ref[0, 0, :]                       # (Eb,)
+    dst_idx = edge_dst_ref[0, 0, :]                       # (Eb,)
+    bins = bins_ref[0]                                    # (U, d)
+    eb = upd_idx.shape[0]
+
+    # gather-as-matmul: (Eb, U) @ (U, d) -> (Eb, d)
+    iota_u = jax.lax.broadcasted_iota(jnp.int32, (eb, num_updates), 1)
+    oh_upd = (upd_idx[:, None] == iota_u).astype(bins.dtype)
+    vals = jax.lax.dot(oh_upd, bins,
+                       preferred_element_type=jnp.float32)
+
+    # scatter-as-matmul: (P, Eb) @ (Eb, d) -> (P, d)
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (eb, part_size), 1)
+    oh_dst = (dst_idx[:, None] == iota_p).astype(bins.dtype)
+    out_ref[0] += jax.lax.dot(oh_dst.T, vals,
+                              preferred_element_type=jnp.float32
+                              ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("part_size", "edge_block", "interpret"))
+def pcpm_gather_pallas(bins: jnp.ndarray, edge_upd: jnp.ndarray,
+                       edge_dst: jnp.ndarray, *, part_size: int,
+                       edge_block: int = 512,
+                       interpret: bool = True) -> jnp.ndarray:
+    """bins: (k, U, d); edge_upd/edge_dst: (k, n_eb, Eb) -> (k, P, d)."""
+    k, num_updates, d = bins.shape
+    _, n_eb, eb = edge_upd.shape
+    assert edge_dst.shape == edge_upd.shape
+    grid = (k, n_eb)
+    kernel = functools.partial(_gather_kernel, part_size=part_size,
+                               num_updates=num_updates)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, eb), lambda p, e: (p, e, 0)),
+            pl.BlockSpec((1, 1, eb), lambda p, e: (p, e, 0)),
+            pl.BlockSpec((1, num_updates, d), lambda p, e: (p, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, part_size, d), lambda p, e: (p, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, part_size, d), bins.dtype),
+        interpret=interpret,
+    )(edge_upd, edge_dst, bins)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the PCPM gather kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pcpm_gather_ref(bins: jnp.ndarray, edge_upd: jnp.ndarray,
+                    edge_dst: jnp.ndarray, *, part_size: int) -> jnp.ndarray:
+    """bins: (k, U, d); edge_upd/edge_dst: (k, n_eb, Eb) -> (k, P, d).
+
+    Pad conventions identical to the kernel: edge_upd == U selects a zero
+    update; edge_dst == part_size discards the contribution.
+    """
+    k, num_updates, d = bins.shape
+    eu = edge_upd.reshape(k, -1)
+    ed = edge_dst.reshape(k, -1)
+    bins_z = jnp.concatenate(
+        [bins, jnp.zeros((k, 1, d), bins.dtype)], axis=1)
+    vals = jnp.take_along_axis(bins_z, eu[:, :, None], axis=1)  # (k, E, d)
+    out = jnp.zeros((k, part_size + 1, d), bins.dtype)
+    out = out.at[jnp.arange(k)[:, None], ed].add(vals)
+    return out[:, :part_size, :]

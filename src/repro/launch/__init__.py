@@ -1,0 +1,6 @@
+from .mesh import (make_production_mesh, make_host_mesh, PEAK_FLOPS_BF16,
+                   HBM_BW, ICI_BW_PER_LINK, HBM_BYTES)
+from . import sharding
+
+__all__ = ["make_production_mesh", "make_host_mesh", "sharding",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW_PER_LINK", "HBM_BYTES"]

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run driver (deliverable e).
+#
+# Lowers + compiles every (architecture x input-shape) cell against the
+# production meshes — 16x16 single-pod and 2x16x16 multi-pod — and
+# extracts the roofline inputs (deliverable g):
+#
+#   compile pass : full config, scan-over-layers, chunked attention.
+#                  Proves shardability, records memory_analysis()
+#                  (per-device bytes -> "fits in 16 GB HBM") and the
+#                  collective-op census of the compiled module.
+#   cost pass    : python-unrolled layers at depth 1 and 2 (LM/GNN),
+#                  dense cost_analysis() FLOPs/bytes + collective
+#                  operand bytes parsed from compiled.as_text();
+#                  extrapolated linearly to the full depth
+#                  (HloCostAnalysis counts a while body once, hence the
+#                  unroll — see EXPERIMENTS.md §Roofline method).
+#
+# Output: one JSON line per (cell x mesh) appended to --out, consumed by
+# benchmarks/roofline.py and EXPERIMENTS.md.
+#
+# The 512-device XLA_FLAGS override above MUST precede every other
+# import (jax locks the device count on first init) and is deliberately
+# local to this module: tests and benches see the 1 real CPU device.
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from . import sharding as shlib
+from .mesh import make_production_mesh, HBM_BYTES
+from .specs import make_cell, all_cells, rule_overrides
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute", "collective-broadcast",
+                "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    total = nbytes
+    for d in dims.split(","):
+        if d:
+            total *= int(d)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))       # [num_groups, group_size]<=...
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    return default
+
+
+# per-device wire bytes for ring algorithms, as a function of the
+# RESULT payload bytes (post-SPMD shapes are per-device local shapes;
+# the optimized-HLO printer omits operand shapes, so the result shape
+# is the robust thing to parse).
+def _wire_bytes(op: str, result_bytes: int, k: int) -> float:
+    if k <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (k - 1) / k
+    if op == "reduce-scatter":          # operand = result * k
+        return float(result_bytes) * (k - 1)
+    if op == "collective-permute":
+        return float(result_bytes)
+    # all-gather / all-to-all / broadcast-like
+    return float(result_bytes) * (k - 1) / k
+
+
+def collective_stats(hlo_text: str, num_partitions: int = 1) -> dict:
+    """Census of collective ops in (post-SPMD) HLO text.
+
+    Per op: count, result payload bytes, and estimated per-device wire
+    bytes (ring-algorithm model, group size parsed from replica_groups).
+    Counts plain and ``-start`` forms once; skips ``-done``/``-update``.
+    While-loop bodies are printed (and counted) once — use unrolled
+    modules for trip-count-correct totals.
+    """
+    per_op: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            if f" {op}(" in line:
+                lhs = line.split(f" {op}(", 1)[0]
+            elif f" {op}-start(" in line:
+                lhs = line.split(f" {op}-start(", 1)[0]
+            else:
+                continue
+            # result shape(s) live on the LHS of the assignment; for
+            # -start tuple results take the LAST element (the output).
+            shapes = _SHAPE_RE.findall(lhs)
+            if not shapes:
+                break
+            d, dims = shapes[-1]
+            nbytes = _shape_bytes(d, dims)
+            k = _group_size(line, num_partitions)
+            slot = per_op.setdefault(
+                op, {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+            slot["count"] += 1
+            slot["bytes"] += nbytes
+            slot["wire_bytes"] += _wire_bytes(op, nbytes, k)
+            break
+    return {"per_op": per_op,
+            "bytes": sum(v["bytes"] for v in per_op.values()),
+            "wire_bytes": sum(v["wire_bytes"] for v in per_op.values())}
+
+
+def _memory_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": repr(e)}
+    out = {}
+    for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    live = (out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0))
+    out["live_bytes"] = int(live)
+    out["hbm_fraction"] = live / HBM_BYTES
+    return out
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": repr(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _lower(cell, mesh):
+    """jit().lower().compile() one cell; returns (lowered, compiled)."""
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate or None)
+    with mesh:
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str, *,
+             do_compile: bool = True, do_cost: bool = True,
+             verbose: bool = True, engine: str = "xla") -> dict:
+    rec: dict = {"arch": arch + ("+pcpm" if engine == "pcpm" else ""),
+                 "shape": shape, "mesh": mesh_name,
+                 "devices": int(mesh.devices.size)}
+    with shlib.use_rules(mesh, rule_overrides(arch, shape)):
+        cell = make_cell(arch, shape, mode="compile", engine=engine)
+        rec["loop_trip"] = cell.loop_trip
+        rec["model_flops"] = cell.model_flops
+        if cell.skip:
+            rec["skip"] = cell.skip
+            return rec
+
+        if do_compile:
+            t0 = time.time()
+            _, compiled = _lower(cell, mesh)
+            txt = compiled.as_text()
+            rec["compile"] = {
+                "seconds": round(time.time() - t0, 1),
+                "memory": _memory_analysis(compiled),
+                "collectives": collective_stats(txt, mesh.devices.size),
+                "cost": _cost_analysis(compiled),
+            }
+            del compiled, txt
+            if verbose:
+                m = rec["compile"]["memory"]
+                print(f"  compile ok {rec['compile']['seconds']}s  "
+                      f"live/dev={m.get('live_bytes', 0)/2**30:.2f} GiB "
+                      f"({m.get('hbm_fraction', 0)*100:.0f}% HBM)",
+                      flush=True)
+
+        if do_cost:
+            # depth-1 and depth-2 unrolled cost passes -> per-layer delta
+            costs = {}
+            depths = (1, 2) if cell.loop_trip > 1 else (None,)
+            for depth in depths:
+                c = make_cell(arch, shape, mode="cost", layers=depth,
+                              engine=engine)
+                t0 = time.time()
+                _, compiled = _lower(c, mesh)
+                txt = compiled.as_text()
+                costs[depth or 0] = {
+                    "seconds": round(time.time() - t0, 1),
+                    "cost": _cost_analysis(compiled),
+                    "collectives": collective_stats(txt, mesh.devices.size),
+                }
+                del compiled, txt
+            rec["cost_passes"] = {str(k): v for k, v in costs.items()}
+            rec["extrapolated"] = _extrapolate(costs, cell.loop_trip)
+            if verbose:
+                e = rec["extrapolated"]
+                print(f"  cost ok  flops/dev={e['flops']:.3e}  "
+                      f"bytes/dev={e['bytes']:.3e}  "
+                      f"coll/dev={e['collective_bytes']:.3e}", flush=True)
+    return rec
+
+
+def _extrapolate(costs: dict, loop_trip: int) -> dict:
+    """total(L) = c1 + (c2 - c1) * (L - 1); single-pass cells as-is."""
+    def field(c, name):
+        if name == "collective_bytes":
+            return c["collectives"]["wire_bytes"]
+        return c["cost"].get(name, 0.0)
+
+    out = {}
+    for name in ("flops", "bytes", "collective_bytes"):
+        if 0 in costs:                      # single-pass (loop_trip == 1)
+            out[name] = field(costs[0], name)
+        else:
+            c1, c2 = field(costs[1], name), field(costs[2], name)
+            out[name] = c1 + (c2 - c1) * (loop_trip - 1)
+    out["per_layer_flops"] = (
+        0.0 if 0 in costs
+        else field(costs[2], "flops") - field(costs[1], "flops"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--engine", choices=["xla", "pcpm"], default="xla")
+    ap.add_argument("--skip-compile", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    if args.all or not args.arch:
+        cells = all_cells()
+    else:
+        from ..configs import get as get_cfg
+        shapes = ([args.shape] if args.shape else
+                  [sp.name for sp in get_cfg(args.arch).shapes])
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single-pod-16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi-pod-2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            print(f"[{mesh_name}] {arch} x {shape}", flush=True)
+            try:
+                rec = run_cell(arch, shape, mesh, mesh_name,
+                               do_compile=not args.skip_compile,
+                               do_cost=not args.skip_cost,
+                               engine=args.engine)
+            except Exception:
+                failures += 1
+                rec = {"arch": arch + ("+pcpm" if args.engine == "pcpm"
+                                       else ""),
+                       "shape": shape, "mesh": mesh_name,
+                       "error": traceback.format_exc()}
+                print(f"  FAILED\n{rec['error']}", flush=True)
+            if "skip" in rec:
+                print(f"  SKIP: {rec['skip']}", flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+            jax.clear_caches()   # keep the 40-cell sweep's RSS bounded
+    print(f"done; {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single-pod: one TPU v5e pod, 16x16 = 256
+chips, axes (data, model).  Multi-pod: 2 pods x 256 = 512 chips with a
+leading "pod" axis (DCN-connected).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int | None = None, model: int = 1):
+    """Test mesh over however many (host) devices exist."""
+    n = jax.device_count()
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline, DESIGN.md §6)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~axis)
+DCN_BW = 25e9                   # bytes/s per host, pod axis
+HBM_BYTES = 16 * 2 ** 30        # v5e HBM capacity

@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules (MaxText-style, minimal).
+
+Models annotate activations/params with LOGICAL axis names; the rules
+active for the current mesh map them to physical mesh axes.  The same
+model code then runs on the single-pod (data, model) mesh, the
+multi-pod (pod, data, model) mesh, and the 1-device CPU test mesh.
+
+``shard`` silently drops a physical axis whenever the dim is not
+divisible by it (e.g. batch=1 long-decode on a data=16 mesh, or 8 KV
+heads on model=16) — the shardability decisions stay in one place and
+the model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of candidate physical axes (used if present)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),          # DP / FSDP data axis
+    "fsdp": ("pod", "data"),           # parameter shard axis (FSDP)
+    "model": ("model",),               # TP: heads / d_ff / vocab
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "embed": (),                       # d_model replicated
+    "seq": (),                         # sequence replicated by default
+    "kv_seq": ("model",),              # long KV caches: sequence-shard
+    "expert": (),                      # experts replicated (TP in-expert)
+    # GNN: graph dims over every axis.  (A 2D nodes x channels layout
+    # was tried and REGRESSED: sharding the MLP contraction dim makes
+    # XLA materialize full-channel edge tensors around every matmul —
+    # see EXPERIMENTS.md §Perf hypothesis log.)
+    "nodes": ("pod", "data", "model"),
+    "edges": ("pod", "data", "model"),
+    "chan": (),
+    "rows": ("pod", "data", "model"),   # embedding-table rows
+    "cand": ("pod", "data", "model"),   # retrieval candidates
+    "graphs": ("pod", "data"),         # batched small graphs
+}
+
+_state = threading.local()
+
+
+def current_rules() -> dict[str, tuple[str, ...]]:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh, overrides: dict | None = None):
+    """Activate sharding rules bound to ``mesh``."""
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    prev = (getattr(_state, "rules", None), getattr(_state, "mesh", None))
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def logical_to_spec(*logical, dims: tuple[int, ...] | None = None) -> P:
+    """Map logical dim names to a PartitionSpec under the active rules.
+
+    With ``dims`` given, physical axes that do not divide the dim are
+    dropped.  Each physical axis is used at most once per spec.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return P(*([None] * len(logical)))
+    rules = current_rules()
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        phys = []
+        for a in rules.get(name, ()):
+            if a not in mesh.axis_names or a in used:
+                continue
+            if dims is not None:
+                size = _axis_size(mesh, a)
+                cur = 1
+                for p in phys:
+                    cur *= _axis_size(mesh, p)
+                if dims[i] % (cur * size) != 0:
+                    continue
+            phys.append(a)
+        used.update(phys)
+        out.append(None if not phys else
+                   (phys[0] if len(phys) == 1 else tuple(phys)))
+    return P(*out)
+
+
+def shard(x, *logical):
+    """with_sharding_constraint by logical names (no-op off-mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(*logical, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical, dims=None) -> NamedSharding:
+    mesh = current_mesh()
+    assert mesh is not None, "named_sharding requires use_rules(mesh)"
+    return NamedSharding(mesh, logical_to_spec(*logical, dims=dims))
+
+
+def divides(dim: int, *logical: str) -> bool:
+    """True iff the full candidate axis product of `logical` divides dim."""
+    mesh = current_mesh()
+    if mesh is None:
+        return False
+    rules = current_rules()
+    size = 1
+    for name in logical:
+        for a in rules.get(name, ()):
+            if a in mesh.axis_names:
+                size *= _axis_size(mesh, a)
+    return size > 1 and dim % size == 0

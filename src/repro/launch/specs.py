@@ -1,0 +1,378 @@
+"""Dry-run cell specs: (architecture x input shape) -> a lowering-ready
+(step_fn, abstract args, in_shardings) triple for a given mesh.
+
+Every argument is a ShapeDtypeStruct (weak-type-correct, shardable, no
+device allocation); param/optimizer shapes come from jax.eval_shape over
+the real initializers so the dry-run exercises exactly the production
+pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get, LMConfig, GNNConfig, RecSysConfig
+from ..configs.base import ShapeSpec
+from ..models import transformer as tf
+from ..models import gnn as gnn_lib
+from ..models import recsys as recsys_lib
+from ..models.gnn import GraphBatch
+from ..optim import AdamW, cosine_schedule
+from . import sharding as shlib
+from ..graphs.sampler import _max_nodes
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    fn: Callable                 # positional-args step function
+    args: tuple                  # abstract args (ShapeDtypeStruct pytrees)
+    in_shardings: tuple
+    skip: Optional[str] = None   # reason if the cell is skipped
+    # roofline bookkeeping
+    loop_trip: int = 1           # layer-scan trip count in compile mode
+    model_flops: float = 0.0     # analytic 6*N*D (or family equivalent)
+    donate: tuple = ()           # argnums donated (train: params+opt)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shard_like(tree_shapes, logical_tree):
+    """NamedSharding pytree for abstract args via logical rules."""
+    def one(s, ax):
+        return shlib.named_sharding(*ax, dims=s.shape)
+    return jax.tree.map(one, tree_shapes, logical_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def _replicated(tree_shapes):
+    return jax.tree.map(
+        lambda s: shlib.named_sharding(*([None] * len(s.shape))),
+        tree_shapes)
+
+
+# ------------------------------------------------------------------- LM
+def _lm_opt(cfg: LMConfig):
+    from .. import perf_flags
+    # >100B params: bf16 mu/nu (f32 state alone would exceed the 256-
+    # chip HBM budget: grok at 314B needs 9.8 GB/chip of f32 moments).
+    default_sd = ("bfloat16" if cfg.param_count() > 1e11 else "float32")
+    return AdamW(lr=cosine_schedule(3e-4, 2000, 100_000),
+                 state_dtype=perf_flags.value("opt_dtype", default_sd))
+
+
+def _lm_opt_logical(cfg: LMConfig):
+    pl = tf.param_logical(cfg)
+    return ("adamw_state", pl)  # marker handled below
+
+
+def _lm_cell(cfg: LMConfig, shape: ShapeSpec, *, mode: str,
+             layers: int | None = None) -> CellSpec:
+    """mode: 'compile' (scan) or 'cost' (python-unrolled)."""
+    work_cfg = cfg if layers is None else dataclasses.replace(
+        cfg, n_layers=layers)
+    unroll = mode == "cost"
+    b, s = shape.global_batch, shape.seq_len
+    params_s = tf.param_shapes(work_cfg)
+    params_sh = _shard_like(params_s, tf.param_logical(work_cfg))
+    n_active = cfg.active_param_count()
+    skip = None
+    if shape.kind == "long_decode" and not cfg.sub_quadratic:
+        skip = ("full-attention arch: 500k decode designated "
+                "sub-quadratic-only (DESIGN.md §4)")
+
+    if shape.kind == "train":
+        opt = _lm_opt(work_cfg)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        opt_sh = type(opt_s)(
+            shlib.named_sharding(),
+            _shard_like(opt_s.mu, tf.param_logical(work_cfg)),
+            _shard_like(opt_s.nu, tf.param_logical(work_cfg)))
+        batch_s = {"tokens": _sds((b, s), jnp.int32),
+                   "labels": _sds((b, s), jnp.int32)}
+        batch_sh = {k: shlib.named_sharding("batch", None,
+                                            dims=(b, s))
+                    for k in batch_s}
+        attn = "chunked_unroll" if unroll else "chunked"
+        # compile pass: 8 microbatches (B/dev 16 -> 2/step) keeps the
+        # remat+activation temps inside HBM; cost pass: single microbatch
+        # so depth-1/2 FLOP extrapolation stays linear.
+        from .. import perf_flags
+        default_nm = 16 if cfg.param_count() > 1e11 else 8
+        nm = perf_flags.value("microbatches", default_nm, int)
+        # each microbatch must still divide the DP width, or the
+        # strided split silently drops data-axis sharding (grok on the
+        # multi-pod mesh: mb16 -> 16-seq microbatches unshardable over
+        # 32 DP shards -> 8x activation blowup; Perf log)
+        mesh = shlib.current_mesh()
+        dp = 1
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for a in shlib.current_rules().get("batch", ()):
+                dp *= sizes.get(a, 1)
+        while nm > 1 and (b % nm or (b // nm) % dp):
+            nm //= 2
+        step = tf.make_train_step(work_cfg, opt, attn_path=attn,
+                                  unroll_layers=unroll,
+                                  num_microbatches=1 if unroll else nm)
+        return CellSpec(cfg.name, shape.name, step,
+                        (params_s, opt_s, batch_s),
+                        (params_sh, opt_sh, batch_sh), skip,
+                        loop_trip=work_cfg.n_layers,
+                        model_flops=6.0 * n_active * b * s,
+                        donate=(0, 1))
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, tokens):
+            return tf.prefill(params, work_cfg, tokens,
+                              unroll_layers=unroll)
+        tokens_s = _sds((b, s), jnp.int32)
+        tok_sh = shlib.named_sharding("batch", None, dims=(b, s))
+        return CellSpec(cfg.name, shape.name, prefill_fn,
+                        (params_s, tokens_s), (params_sh, tok_sh), skip,
+                        loop_trip=work_cfg.n_layers,
+                        model_flops=2.0 * n_active * b * s)
+
+    # decode / long_decode
+    cache_s = tf.cache_shapes(work_cfg, b, s)
+    cache_logical = tf._cache_logical(work_cfg)
+    cache_sh = {k: shlib.named_sharding(None, *cache_logical,
+                                        dims=v.shape)
+                for k, v in cache_s.items()}
+    tokens_s = _sds((b, 1), jnp.int32)
+    tok_sh = shlib.named_sharding("batch", None, dims=(b, 1))
+    t_s = _sds((), jnp.int32)
+    t_sh = shlib.named_sharding()
+
+    def decode_fn(params, cache, tokens, t):
+        return tf.decode_step(params, work_cfg, cache, tokens, t,
+                              unroll_layers=unroll)
+
+    return CellSpec(cfg.name, shape.name, decode_fn,
+                    (params_s, cache_s, tokens_s, t_s),
+                    (params_sh, cache_sh, tok_sh, t_sh), skip,
+                    loop_trip=work_cfg.n_layers,
+                    model_flops=2.0 * n_active * b, donate=(1,))
+
+
+# ------------------------------------------------------------------ GNN
+def _pad512(x: int) -> int:
+    """Production graphs are padded at load time so node/edge streams
+    divide every mesh axis product (512 covers 16x16 and 2x16x16);
+    without this the divisibility-checking rules silently replicate
+    (e.g. ogb's 2,449,029 nodes -> 2.9 TB/device)."""
+    return -(-x // 512) * 512
+
+
+def _gnn_batch_shapes(cfg: GNNConfig, shape: ShapeSpec):
+    if shape.kind == "batched_graphs":
+        n = shape.n_nodes * shape.global_batch
+        e = shape.n_edges * shape.global_batch
+        n_graphs = shape.global_batch
+    elif shape.kind == "minibatch":
+        n = _max_nodes(shape.batch_nodes, shape.fanout)
+        e = sum(shape.batch_nodes
+                * int(np.prod(shape.fanout[:i + 1]))
+                for i in range(len(shape.fanout)))
+        n_graphs = 1
+    else:
+        n, e, n_graphs = shape.n_nodes, shape.n_edges, 1
+    n, e = _pad512(n), _pad512(e)
+    d_feat = shape.d_feat or 32
+    gb = GraphBatch(
+        _sds((e,), jnp.int32), _sds((e,), jnp.int32),
+        _sds((e,), jnp.float32), _sds((n, d_feat), jnp.float32),
+        _sds((n, 3), jnp.float32), _sds((n,), jnp.float32),
+        _sds((n,), jnp.int32), n_graphs, _sds((n,), jnp.int32))
+    sh = GraphBatch(
+        shlib.named_sharding("edges", dims=(e,)),
+        shlib.named_sharding("edges", dims=(e,)),
+        shlib.named_sharding("edges", dims=(e,)),
+        shlib.named_sharding("nodes", None, dims=(n, d_feat)),
+        shlib.named_sharding("nodes", None, dims=(n, 3)),
+        shlib.named_sharding("nodes", dims=(n,)),
+        shlib.named_sharding("nodes", dims=(n,)), n_graphs,
+        shlib.named_sharding("nodes", dims=(n,)))
+    return gb, sh, n, e, d_feat
+
+
+def _gnn_cell(cfg: GNNConfig, shape: ShapeSpec, *, mode: str,
+              layers: int | None = None) -> CellSpec:
+    # production cells run mixed precision (bf16 messages, f32 masters);
+    # smoke tests keep the f32 default for tight numeric assertions.
+    work_cfg = dataclasses.replace(
+        cfg, act_dtype="bfloat16",
+        **({} if layers is None else {"n_layers": layers}))
+    gb, gb_sh, n, e, d_feat = _gnn_batch_shapes(work_cfg, shape)
+    n_out = work_cfg.n_vars or 16
+    # eager init, then abstract: the equivariant inits compute CG/Wigner
+    # coefficients through host-side numpy (fails under eval_shape
+    # tracing), and GNN params are small enough to materialize.
+    params_c = gnn_lib.init_gnn(work_cfg, jax.random.key(0), d_feat,
+                                n_out)
+    params_s = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params_c)
+    del params_c
+    params_sh = _replicated(params_s)
+    opt = AdamW(lr=1e-3)
+    opt_s = jax.eval_shape(opt.init, params_s)
+    opt_sh = type(opt_s)(shlib.named_sharding(),
+                         _replicated(opt_s.mu), _replicated(opt_s.nu))
+    step = gnn_lib.make_gnn_train_step(work_cfg, opt, n_out=n_out,
+                                       unroll_layers=mode == "cost")
+    # GNN "model flops" proxy: edges x d_hidden^2 x layers x 6
+    mf = 6.0 * e * work_cfg.d_hidden ** 2 * work_cfg.n_layers
+    return CellSpec(cfg.name, shape.name, step, (params_s, opt_s, gb),
+                    (params_sh, opt_sh, gb_sh), None,
+                    loop_trip=1, model_flops=mf, donate=(0, 1))
+
+
+# --------------------------------------------------------------- recsys
+def _recsys_cell(cfg: RecSysConfig, shape: ShapeSpec, *,
+                 mode: str) -> CellSpec:
+    params_s = recsys_lib.param_shapes(cfg)
+    params_sh = {
+        "table": shlib.named_sharding("rows", None,
+                                      dims=(cfg.vocab, cfg.embed_dim)),
+        "bilinear": shlib.named_sharding(None, None),
+        "route_init": shlib.named_sharding(None, None),
+        "out_proj": shlib.named_sharding(None, None),
+    }
+    b = shape.global_batch
+    hist_s = _sds((b, cfg.hist_len), jnp.int32)
+    hist_sh = shlib.named_sharding("batch", None,
+                                   dims=(b, cfg.hist_len))
+    mf = 2.0 * b * cfg.hist_len * cfg.embed_dim ** 2 * cfg.capsule_iters
+
+    if shape.kind == "recsys_train":
+        opt = AdamW(lr=1e-3)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        opt_sh = type(opt_s)(
+            shlib.named_sharding(),
+            jax.tree.map(lambda s, sh: sh, opt_s.mu, params_sh),
+            jax.tree.map(lambda s, sh: sh, opt_s.nu, params_sh))
+        batch_s = {"hist": hist_s, "target": _sds((b,), jnp.int32)}
+        batch_sh = {"hist": hist_sh,
+                    "target": shlib.named_sharding("batch", dims=(b,))}
+        step = recsys_lib.make_train_step(cfg, opt)
+        return CellSpec(cfg.name, shape.name, step,
+                        (params_s, opt_s, batch_s),
+                        (params_sh, opt_sh, batch_sh), None,
+                        model_flops=mf + 2.0 * b * b * cfg.embed_dim,
+                        donate=(0, 1))
+
+    if shape.kind == "retrieval":
+        nc = shape.n_candidates
+        cand_s = _sds((nc,), jnp.int32)
+        cand_sh = shlib.named_sharding("cand", dims=(nc,))
+
+        def retr(params, hist, cand):
+            return recsys_lib.retrieval_step(params, cfg, hist, cand)
+        return CellSpec(cfg.name, shape.name, retr,
+                        (params_s, hist_s, cand_s),
+                        (params_sh, hist_sh, cand_sh), None,
+                        model_flops=mf + 2.0 * b * nc * cfg.embed_dim
+                        * cfg.n_interests)
+
+    def serve(params, hist):
+        return recsys_lib.serve_step(params, cfg, hist)
+    return CellSpec(cfg.name, shape.name, serve, (params_s, hist_s),
+                    (params_sh, hist_sh), None, model_flops=mf)
+
+
+# --------------------------------------------------------------- lookup
+def rule_overrides(arch: str, shape_name: str) -> dict:
+    """Per-cell logical-rule overrides (activate in use_rules BEFORE
+    make_cell).
+
+    Serving re-shards weights: with the training FSDP rules, every
+    decoded token all-gathers every layer's weights (measured: decode
+    cells 30-600x collective-over-compute).  When the weights fit
+    model-sharded (bf16/16-way < 12 GB/chip), serve cells keep them
+    RESIDENT: fsdp/vocab collapse to the model axis only.
+    """
+    cfg = get(arch)
+    if cfg.family == "lm" and not shape_name.startswith("train"):
+        # resident-weight budget: <= 4 GB/chip leaves room for KV cache
+        # + activations (mixtral's 5.9 GB resident measured 158% HBM at
+        # prefill_32k — reverted to FSDP gathering for it; §Perf log).
+        if cfg.param_count() * 2 / 16 < 4e9:
+            return {"fsdp": (), "batch": ("pod", "data")}
+    return {}
+
+
+def _gnn_pcpm_cell(cfg: GNNConfig, shape: ShapeSpec, *, mode: str,
+                   layers: int | None = None) -> CellSpec:
+    """GNN full-graph cell over the PCPM-distributed engine (the
+    paper's technique as the message-passing transport; §Perf)."""
+    from ..models import gnn_dist
+    work_cfg = dataclasses.replace(
+        cfg, act_dtype="bfloat16",
+        **({} if layers is None else {"n_layers": layers}))
+    mesh = shlib.current_mesh()
+    s_count = int(mesh.devices.size)
+    n, e = _pad512(shape.n_nodes), _pad512(shape.n_edges)
+    ssz = -(-n // s_count)
+    u_max = gnn_dist.estimate_u_max(n, e, s_count, skew=2.0)
+    e_max = max(128, int(-(-(e // s_count) * 1.5 // 128) * 128))
+    d_feat = shape.d_feat or 32
+    n_out = work_cfg.n_vars or 16
+    g = gnn_dist.DistGraph.abstract(s_count, ssz, u_max, e_max, d_feat)
+    g_sh = gnn_dist.dist_graph_shardings(mesh, g)
+    params_c = gnn_dist.init_graphcast(work_cfg, jax.random.key(0),
+                                       d_feat, n_out)
+    params_s = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params_c)
+    del params_c
+    params_sh = _replicated(params_s)
+    opt = AdamW(lr=1e-3)
+    opt_s = jax.eval_shape(opt.init, params_s)
+    opt_sh = type(opt_s)(shlib.named_sharding(),
+                         _replicated(opt_s.mu), _replicated(opt_s.nu))
+    step = gnn_dist.make_dist_train_step(work_cfg, opt, mesh,
+                                         n_out=n_out,
+                                         unroll_layers=mode == "cost")
+    mf = 6.0 * e * work_cfg.d_hidden ** 2 * work_cfg.n_layers
+    return CellSpec(cfg.name + "+pcpm", shape.name, step,
+                    (params_s, opt_s, g), (params_sh, opt_sh, g_sh),
+                    None, loop_trip=1, model_flops=mf, donate=(0, 1))
+
+
+def make_cell(arch: str, shape_name: str, *, mode: str = "compile",
+              layers: int | None = None,
+              engine: str = "xla") -> CellSpec:
+    """Requires an active shlib.use_rules(mesh) context.
+
+    ``engine="pcpm"`` swaps the GNN message-passing transport for the
+    PCPM-distributed exchange (graphcast full-graph cells only).
+    """
+    cfg = get(arch)
+    shape = next(s for s in cfg.shapes if s.name == shape_name)
+    if engine == "pcpm":
+        assert cfg.family == "gnn" and shape.kind == "full_graph", \
+            "pcpm engine variant: GNN full-graph cells only"
+        return _gnn_pcpm_cell(cfg, shape, mode=mode, layers=layers)
+    if cfg.family == "lm":
+        return _lm_cell(cfg, shape, mode=mode, layers=layers)
+    if cfg.family == "gnn":
+        return _gnn_cell(cfg, shape, mode=mode, layers=layers)
+    return _recsys_cell(cfg, shape, mode=mode)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ["mixtral-8x7b", "grok-1-314b", "stablelm-1.6b",
+                 "tinyllama-1.1b", "deepseek-67b", "graphcast",
+                 "nequip", "mace", "equiformer-v2", "mind"]:
+        for s in get(arch).shapes:
+            out.append((arch, s.name))
+    return out

@@ -1,0 +1,3 @@
+from . import layers, transformer
+
+__all__ = ["layers", "transformer"]

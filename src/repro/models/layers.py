@@ -1,0 +1,119 @@
+"""Shared neural-net layers (pure functional JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import shard
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 1e6) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = shard(h, "batch", None, "ff")
+    return h @ w_down
+
+
+def dense_init(key, shape, *, scale: float | None = None,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    fan_in = shape[-2] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024,
+                      kv_len=None, unroll=False):
+    """Online-softmax attention, lax.scan over KV chunks.
+
+    Pure-XLA flash attention: O(S) live memory in the compiled program
+    (the S^2 score matrix never materializes).  This is the TPU dry-run
+    path for long sequences; the Pallas kernel is the on-chip version.
+
+    ``unroll=True`` replaces the scan with a python loop over the same
+    chunk bodies — used by the dry-run COST pass, where HloCostAnalysis
+    counts a while body once regardless of trip count.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D).  Sq == Skv (prefill/train).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    assert skv % chunk == 0, "pad kv to chunk multiple"
+    group = hq // hkv
+    scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq) + (skv - sq)
+
+    kc = k.reshape(b, skv // chunk, chunk, hkv, d)
+    vc = v.reshape(b, skv // chunk, chunk, hkv, d)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kb, vb, c_idx = inputs
+        kb = jnp.repeat(kb.astype(jnp.float32), group, axis=2)
+        vb = jnp.repeat(vb.astype(jnp.float32), group, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb)
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_cur = s.max(-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq), -1e30, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    if unroll:
+        carry = init
+        for c_idx in range(skv // chunk):
+            carry, _ = step(carry, (kc[:, c_idx], vc[:, c_idx],
+                                    jnp.int32(c_idx)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, init,
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             jnp.arange(skv // chunk)))
+    out = acc / jnp.where(l[..., None] == 0, 1.0, l[..., None])
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, kv_len=None):
+    """Plain masked attention (short sequences / decode)."""
+    from ..kernels.flash_attention.ref import mha_ref
+    out = mha_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                  v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                  kv_len=kv_len)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,124 @@
+"""MIND: multi-interest network with dynamic (capsule) routing
+[arXiv:1904.08030].
+
+The embedding lookup is the hot path (kernel_taxonomy §RecSys): JAX has
+no EmbeddingBag, so lookups go through kernels/embedding_bag (XLA
+take+segment path in production, the MXU one-hot Pallas kernel for
+VMEM-resident shards).  Tables are row-sharded over (data, model); the
+distributed lookup dedups ids per shard first — the PCPM compression
+applied to embedding traffic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RecSysConfig
+from ..launch.sharding import shard
+
+
+def init_mind(cfg: RecSysConfig, key) -> dict:
+    d, v, k = cfg.embed_dim, cfg.vocab, cfg.n_interests
+    ks = jax.random.split(key, 4)
+    return {
+        "table": (jax.random.normal(ks[0], (v, d), jnp.float32)
+                  * d ** -0.5),
+        "bilinear": (jax.random.normal(ks[1], (d, d), jnp.float32)
+                     * d ** -0.5),
+        # fixed per-(position, interest) routing prior (MIND init)
+        "route_init": (jax.random.normal(ks[2], (cfg.hist_len, k),
+                                         jnp.float32)),
+        "out_proj": (jax.random.normal(ks[3], (d, d), jnp.float32)
+                     * d ** -0.5),
+    }
+
+
+def param_shapes(cfg: RecSysConfig):
+    return jax.eval_shape(lambda: init_mind(cfg, jax.random.key(0)))
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Row-sharded embedding gather (ids >= vocab -> zero row)."""
+    v = table.shape[0]
+    valid = (ids < v)[..., None]
+    return jnp.take(table, jnp.clip(ids, 0, v - 1), axis=0) * valid
+
+
+def interests(params: dict, cfg: RecSysConfig,
+              hist: jnp.ndarray) -> jnp.ndarray:
+    """Multi-interest extraction: hist (B, L) item ids (pad >= vocab)
+    -> (B, K, d) interest capsules via 3-iteration dynamic routing."""
+    b_sz, l = hist.shape
+    k = cfg.n_interests
+    e = lookup(params["table"], hist)                     # (B, L, d)
+    e = shard(e, "batch", None, None)
+    eh = e @ params["bilinear"]                            # (B, L, d)
+    mask = (hist < cfg.vocab).astype(jnp.float32)          # (B, L)
+    logit_mask = (mask - 1.0) * 1e9
+    b_route = jnp.broadcast_to(params["route_init"][None],
+                               (b_sz, l, k))
+    caps = None
+    for it in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_route + logit_mask[..., None], axis=-1)
+        caps = _squash(jnp.einsum("blk,bld->bkd", w * mask[..., None],
+                                  jax.lax.stop_gradient(eh)
+                                  if it < cfg.capsule_iters - 1 else eh))
+        if it < cfg.capsule_iters - 1:
+            b_route = b_route + jnp.einsum(
+                "bld,bkd->blk", jax.lax.stop_gradient(eh), caps)
+    caps = caps @ params["out_proj"]
+    return shard(caps, "batch", None, None)                # (B, K, d)
+
+
+def label_aware_attention(caps: jnp.ndarray, target: jnp.ndarray,
+                          *, power: float = 2.0) -> jnp.ndarray:
+    """caps (B, K, d), target (B, d) -> user vector (B, d)."""
+    att = jnp.einsum("bkd,bd->bk", caps, target)
+    att = jax.nn.softmax(power * att, axis=-1)
+    return jnp.einsum("bk,bkd->bd", att, caps)
+
+
+def mind_loss(params: dict, cfg: RecSysConfig, batch: dict) -> jnp.ndarray:
+    """In-batch sampled-softmax loss: positives on the diagonal."""
+    caps = interests(params, cfg, batch["hist"])           # (B, K, d)
+    tgt = lookup(params["table"], batch["target"])         # (B, d)
+    user = label_aware_attention(caps, tgt)                # (B, d)
+    logits = user @ tgt.T                                  # (B, B)
+    logits = shard(logits, "batch", None)
+    labels = jnp.arange(user.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], -1).mean()
+
+
+def make_train_step(cfg: RecSysConfig, optimizer):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: mind_loss(p, cfg, batch))(params)
+        params, opt_state, gnorm = optimizer.update(grads, opt_state,
+                                                    params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+    return step
+
+
+def serve_step(params: dict, cfg: RecSysConfig,
+               hist: jnp.ndarray) -> jnp.ndarray:
+    """Online inference: user history -> K interest vectors."""
+    return interests(params, cfg, hist)
+
+
+def retrieval_step(params: dict, cfg: RecSysConfig, hist: jnp.ndarray,
+                   cand: jnp.ndarray, *, top_k: int = 64):
+    """Score one (or few) users against a candidate set.
+
+    hist (B, L); cand (Ncand,) item ids.  Batched dot — the max over
+    interests (MIND retrieval rule), then top-k."""
+    caps = interests(params, cfg, hist)                    # (B, K, d)
+    ce = lookup(params["table"], cand)                     # (N, d)
+    ce = shard(ce, "cand", None)
+    scores = jnp.einsum("bkd,nd->bkn", caps, ce).max(axis=1)  # (B, N)
+    return jax.lax.top_k(scores, top_k)

@@ -1,0 +1,453 @@
+"""LM transformer (dense + MoE): GQA, RoPE, RMSNorm, SwiGLU, sliding-
+window attention, scan-over-layers, KV-cache decode.
+
+Functional: params are a plain pytree; ``init_lm`` materializes them,
+``param_shapes`` (via jax.eval_shape) gives ShapeDtypeStructs for the
+dry run.  Distribution is expressed through logical-axis sharding
+constraints (launch/sharding.py) — FSDP over (pod, data), TP over model.
+
+MoE dispatch is PCPM-inspired (DESIGN.md §4): tokens are routed with a
+capacity-bounded scatter that groups them contiguously per destination
+expert — the partition-centric ordering — so the all-to-all moves dense
+buffers, not per-token scatters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from ..launch.sharding import shard, divides
+from .. import perf_flags
+from .layers import (rms_norm, rope, dense_init, chunked_attention,
+                     dense_attention)
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------- params
+def init_lm(cfg: LMConfig, key) -> dict:
+    l, d, dh = cfg.n_layers, cfg.d_model, cfg.dh
+    hq, hkv, f, v = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab
+    ks = jax.random.split(key, 16)
+    layer = {
+        "attn_norm": jnp.ones((l, d), PARAM_DTYPE),
+        "ffn_norm": jnp.ones((l, d), PARAM_DTYPE),
+        "wq": dense_init(ks[0], (l, d, hq * dh)),
+        "wk": dense_init(ks[1], (l, d, hkv * dh)),
+        "wv": dense_init(ks[2], (l, d, hkv * dh)),
+        "wo": dense_init(ks[3], (l, hq * dh, d)),
+    }
+    if cfg.moe:
+        e = cfg.n_experts
+        layer.update(
+            router=dense_init(ks[4], (l, d, e), dtype=jnp.float32),
+            w_gate=dense_init(ks[5], (l, e, d, f)),
+            w_up=dense_init(ks[6], (l, e, d, f)),
+            w_down=dense_init(ks[7], (l, e, f, d)))
+    else:
+        layer.update(
+            w_gate=dense_init(ks[5], (l, d, f)),
+            w_up=dense_init(ks[6], (l, d, f)),
+            w_down=dense_init(ks[7], (l, f, d)))
+    return {
+        "embed": dense_init(ks[8], (v, d), scale=1.0),
+        "unembed": dense_init(ks[9], (d, v)),
+        "final_norm": jnp.ones((d,), PARAM_DTYPE),
+        "layers": layer,
+    }
+
+
+def param_shapes(cfg: LMConfig):
+    return jax.eval_shape(lambda: init_lm(cfg, jax.random.key(0)))
+
+
+def param_logical(cfg: LMConfig) -> dict:
+    """Logical axes per param (leading scan axis = None)."""
+    layer = {
+        "attn_norm": (None, None), "ffn_norm": (None, None),
+        "wq": (None, "fsdp", "model"), "wk": (None, "fsdp", "model"),
+        "wv": (None, "fsdp", "model"), "wo": (None, "model", "fsdp"),
+    }
+    if cfg.moe:
+        layer.update(router=(None, "fsdp", None),
+                     w_gate=(None, "expert", "fsdp", "ff"),
+                     w_up=(None, "expert", "fsdp", "ff"),
+                     w_down=(None, "expert", "ff", "fsdp"))
+    else:
+        layer.update(w_gate=(None, "fsdp", "ff"),
+                     w_up=(None, "fsdp", "ff"),
+                     w_down=(None, "ff", "fsdp"))
+    return {"embed": ("vocab", "fsdp"), "unembed": ("fsdp", "vocab"),
+            "final_norm": (None,), "layers": layer}
+
+
+def shard_params(params: dict, cfg: LMConfig) -> dict:
+    return jax.tree.map(lambda p, ax: shard(p, *ax), params,
+                        param_logical(cfg), is_leaf=lambda x: x is None)
+
+
+# ----------------------------------------------------------------- blocks
+def _attention_block(x, p, cfg: LMConfig, positions, attn_path: str):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(b, s, hq, dh)
+    k = (h @ p["wk"]).reshape(b, s, hkv, dh)
+    v = (h @ p["wv"]).reshape(b, s, hkv, dh)
+    q = shard(rope(q, positions, cfg.rope_theta), "batch", None, "heads",
+              None)
+    k = shard(rope(k, positions, cfg.rope_theta), "batch", None,
+              "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    if attn_path.startswith("chunked"):
+        o = chunked_attention(
+            q, k, v, causal=True, window=cfg.window,
+            chunk=min(perf_flags.value("attn_chunk", 1024, int), s),
+            unroll=attn_path == "chunked_unroll")
+    else:
+        o = dense_attention(q, k, v, causal=True, window=cfg.window)
+    o = shard(o, "batch", None, "heads", None)
+    return x + o.reshape(b, s, hq * dh) @ p["wo"]
+
+
+def _moe_ffn(h, p, cfg: LMConfig):
+    """Capacity-bounded top-k MoE with PARTITION-LOCAL dispatch.
+
+    Dispatch/combine are vmapped per sequence (the batch shard is the
+    partition), so every gather/scatter index is local to a device and
+    the only cross-device movement is the expert einsum's sharded
+    contraction.  The earlier global-token-index dispatch made XLA move
+    full (T, d) f32 buffers through all-reduce/collective-permute —
+    ~30 GiB/layer on mixtral train (§Perf hillclimb A, confirmed).
+    Capacity is per-sequence (GShard-style group capacity).
+    Returns (out, aux_loss).
+    """
+    b, s, d = h.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(cfg.capacity_factor * s * k / e), 1)
+    cap = -(-cap // 128) * 128 if cap > 128 else cap
+
+    logits = (h.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))             # (B, S, E)
+    gate_vals, experts = jax.lax.top_k(logits, k)            # (B, S, K)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    f_e = jnp.mean(jax.nn.one_hot(experts[..., 0], e), axis=(0, 1))
+    aux = e * jnp.sum(f_e * probs.mean((0, 1)))
+
+    def dispatch(xt, expert_s, gate_s):
+        """One sequence: xt (S, d); returns this sequence's expert
+        buffers and combine metadata — all indices local."""
+        e_flat = expert_s.reshape(-1)                        # (S*K,)
+        g_flat = gate_s.reshape(-1).astype(xt.dtype)
+        t_flat = jnp.repeat(jnp.arange(s), k)
+        oh = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)      # (SK, E)
+        pos = jnp.sum(jnp.cumsum(oh, 0) * oh, -1) - 1        # slot
+        keep = (pos < cap).astype(xt.dtype)
+        xin = jnp.zeros((e, cap, d), xt.dtype)
+        xin = xin.at[e_flat, pos].add(xt[t_flat] * keep[:, None],
+                                      mode="drop")
+        return xin, (e_flat, pos, g_flat * keep, t_flat)
+
+    def combine(xout, meta):
+        e_flat, pos, w_flat, t_flat = meta
+        vals = xout[e_flat, jnp.clip(pos, 0, cap - 1)]       # (SK, d)
+        yt = jnp.zeros((s, d), xout.dtype)
+        return yt.at[t_flat].add(vals * w_flat[:, None])
+
+    xin, meta = jax.vmap(dispatch)(h, experts, gates)        # (B,E,C,d)
+    xin = shard(xin, "batch", "expert", None, None)
+    act = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["w_gate"]))
+    act = act * jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    act = shard(act, "batch", "expert", None, "ff")
+    xout = jnp.einsum("becf,efd->becd", act, p["w_down"])
+    xout = shard(xout, "batch", "expert", None, None)
+    y = jax.vmap(combine)(xout, meta)                        # (B, S, d)
+    return y, aux
+
+
+def _ffn_block(x, p, cfg: LMConfig):
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if cfg.moe:
+        out, aux = _moe_ffn(h, p, cfg)
+        return x + out, aux
+    act = jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])
+    act = shard(act, "batch", None, "ff")
+    return x + act @ p["w_down"], jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------- scan
+def _sqrt_block(n: int) -> int:
+    """Divisor of n closest to sqrt(n) (sqrt-remat block size)."""
+    best, target = 1, n ** 0.5
+    for b in range(1, n + 1):
+        if n % b == 0 and abs(b - target) < abs(best - target):
+            best = b
+    return best
+
+
+def _scan_layers(body, carry, xs, n_layers: int, unroll: bool):
+    """lax.scan over stacked layer params, or a python unroll.
+
+    With the ``sqrt_remat`` perf flag, layers scan as (outer x block)
+    nested scans with the checkpoint at the OUTER level: the residual
+    stack holds L/b + b carries instead of L, at zero extra recompute
+    (the per-layer checkpoint already recomputes each forward once) —
+    §Perf hillclimb on the deep LMs (deepseek 95L, grok 64L).
+
+    The unrolled form exists for the dry-run COST pass: XLA's
+    HloCostAnalysis counts a while body once regardless of trip count,
+    so roofline terms are derived from small unrolled programs
+    (EXPERIMENTS.md §Roofline method)."""
+    if not unroll:
+        block = _sqrt_block(n_layers)
+        if (not perf_flags.enabled("no_sqrt_remat")
+                and 1 < block < n_layers):
+            outer = n_layers // block
+            xs_b = jax.tree.map(
+                lambda a: a.reshape(outer, block, *a.shape[1:]), xs)
+
+            def outer_body(c, xb):
+                c, ys = jax.lax.scan(body, c, xb)
+                return c, ys
+
+            carry, ys = jax.lax.scan(
+                jax.checkpoint(outer_body), carry, xs_b)
+            if ys is not None:
+                ys = jax.tree.map(
+                    lambda a: a.reshape(n_layers, *a.shape[2:]), ys)
+            return carry, ys
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n_layers):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        y_stack = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        y_stack = None
+    return carry, y_stack
+
+
+# ---------------------------------------------------------------- forward
+def forward(params: dict, cfg: LMConfig, tokens: jnp.ndarray, *,
+            attn_path: str = "auto",
+            unroll_layers: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+    b, s = tokens.shape
+    if attn_path == "auto":
+        attn_path = "chunked" if s >= 2048 else "dense"
+    x = shard(params["embed"][tokens], "batch", None, None)
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        x, aux = carry
+        if perf_flags.enabled("gather_weights"):
+            # FSDP discipline: un-shard THIS layer's weights up front so
+            # no matmul contracts over a sharded dim (otherwise XLA
+            # all-reduces activation-sized partials; §Perf hillclimb A).
+            lp = jax.tree.map(
+                lambda w: shard(w, *([None] * w.ndim)), lp)
+        x = _attention_block(x, lp, cfg, positions, attn_path)
+        x = shard(x, "batch", None, None)
+        x, aux_l = _ffn_block(x, lp, cfg)
+        x = shard(x, "batch", None, None)
+        return (x, aux + aux_l), None
+
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if perf_flags.enabled("remat_dots")
+              else jax.checkpoint_policies.nothing_saveable)
+    body = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = _scan_layers(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], cfg.n_layers,
+                               unroll_layers)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x @ params["unembed"], "batch", None, "vocab")
+    return logits, aux / cfg.n_layers
+
+
+def lm_loss(params: dict, cfg: LMConfig, tokens, labels, *,
+            attn_path: str = "auto", aux_weight: float = 0.01,
+            unroll_layers: bool = False):
+    logits, aux = forward(params, cfg, tokens, attn_path=attn_path,
+                          unroll_layers=unroll_layers)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: the gather would
+    # force an all-gather of the vocab-sharded f32 logits; the one-hot
+    # product keeps the vocab axis sharded end-to-end.
+    onehot = shard(jax.nn.one_hot(labels, cfg.vocab, dtype=logits.dtype),
+                   "batch", None, "vocab")
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (lse - gold).mean()
+    return nll + aux_weight * aux, (nll, aux)
+
+
+def make_train_step(cfg: LMConfig, optimizer, *, attn_path: str = "auto",
+                    unroll_layers: bool = False,
+                    num_microbatches: int = 1):
+    """Train step with optional gradient accumulation.
+
+    ``num_microbatches > 1`` scans the global batch in slices, keeping
+    activation temps 1/num_microbatches the size (the standard fit-in-HBM
+    lever for the train_4k cells) and accumulating grads in f32.  The
+    microbatch slicing is strided (B -> (micro, num_micro) reshape) so
+    each microbatch stays fully sharded over the data axes.
+    """
+    def grad_fn(params, tokens, labels):
+        return jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, tokens, labels,
+                              attn_path=attn_path,
+                              unroll_layers=unroll_layers),
+            has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        params = shard_params(params, cfg)
+        if num_microbatches == 1:
+            (loss, (nll, aux)), grads = grad_fn(
+                params, batch["tokens"], batch["labels"])
+        else:
+            b, s = batch["tokens"].shape
+            nm = num_microbatches
+            assert b % nm == 0, (b, nm)
+
+            def mb(x):  # (B, S) -> (nm, B/nm, S), microbatches strided
+                x = x.reshape(b // nm, nm, s).swapaxes(0, 1)
+                return shard(x, None, "batch", None)
+            toks, labs = mb(batch["tokens"]), mb(batch["labels"])
+
+            def acc_step(carry, mb_batch):
+                g_acc, l_acc, n_acc, a_acc = carry
+                (loss, (nll, aux)), g = grad_fn(params, *mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss, n_acc + nll, a_acc + aux), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            z = jnp.zeros((), jnp.float32)
+            (grads, loss, nll, aux), _ = jax.lax.scan(
+                acc_step, (g0, z, z, z), (toks, labs))
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            loss, nll, aux = loss / nm, nll / nm, aux / nm
+        grads = shard_params(grads, cfg)
+        new_params, new_state, gnorm = optimizer.update(grads, opt_state,
+                                                        params)
+        new_params = shard_params(new_params, cfg)
+        metrics = {"loss": loss, "nll": nll, "aux": aux, "gnorm": gnorm}
+        return new_params, new_state, metrics
+    return train_step
+
+
+# ----------------------------------------------------------------- serve
+def _cache_logical(cfg: LMConfig) -> tuple:
+    """KV cache (B, S, Hkv, D): shard heads if divisible, else sequence."""
+    if divides(cfg.n_kv_heads, "kv_heads"):
+        return ("batch", None, "kv_heads", None)
+    return ("batch", "kv_seq", None, None)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    slots = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (cfg.n_layers, batch, slots, cfg.n_kv_heads, cfg.dh)
+    return {"k": jnp.zeros(shape, PARAM_DTYPE),
+            "v": jnp.zeros(shape, PARAM_DTYPE)}
+
+
+def cache_shapes(cfg: LMConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def prefill(params: dict, cfg: LMConfig, tokens: jnp.ndarray, *,
+            unroll_layers: bool = False):
+    """Prefill: logits for all positions + KV cache (window-sized if SWA).
+
+    serve_step for the `prefill_*` shape cells."""
+    b, s = tokens.shape
+    x = shard(params["embed"][tokens], "batch", None, None)
+    positions = jnp.arange(s)
+    slots = min(s, cfg.window) if cfg.window else s
+
+    def body(x, lp):
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+        q = (h @ lp["wq"]).reshape(b, s, hq, dh)
+        k = (h @ lp["wk"]).reshape(b, s, hkv, dh)
+        v = (h @ lp["wv"]).reshape(b, s, hkv, dh)
+        q = shard(rope(q, positions, cfg.rope_theta), "batch", None,
+                  "heads", None)
+        k = shard(rope(k, positions, cfg.rope_theta), "batch", None,
+                  "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+        o = chunked_attention(
+            q, k, v, causal=True, window=cfg.window,
+            chunk=min(perf_flags.value("attn_chunk", 1024, int), s),
+            unroll=unroll_layers)
+        x = x + o.reshape(b, s, hq * dh) @ lp["wo"]
+        x, _ = _ffn_block(x, lp, cfg)
+        x = shard(x, "batch", None, None)
+        kc = shard(k[:, -slots:], *_cache_logical(cfg))
+        vc = shard(v[:, -slots:], *_cache_logical(cfg))
+        return x, {"k": kc, "v": vc}
+
+    x, cache = _scan_layers(body, x, params["layers"], cfg.n_layers,
+                            unroll_layers)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x[:, -1:] @ params["unembed"], "batch", None, "vocab")
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: LMConfig, cache: dict,
+                tokens: jnp.ndarray, t: jnp.ndarray, *,
+                unroll_layers: bool = False):
+    """One token for every sequence in the batch.
+
+    tokens (B, 1); t = current position — scalar (lockstep batch) or
+    (B,) per-slot positions (continuous batching, serve/engine.py).
+    serve_step for the `decode_*`/`long_*` cells."""
+    b = tokens.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    slots = cache["k"].shape[2]
+    t = jnp.asarray(t)
+    per_slot = t.ndim == 1
+    slot = (t % slots).astype(jnp.int32)
+    kv_len = jnp.minimum(t + 1, slots)
+    x = shard(params["embed"][tokens], "batch", None, None)
+    positions = t.reshape(b, 1) if per_slot else jnp.full((1,), t,
+                                                          jnp.int32)
+
+    def write_cache(c, new, slot):
+        if per_slot:
+            return jax.vmap(lambda cb, nb, sb: jax.lax.dynamic_update_slice(
+                cb, nb, (sb, 0, 0)))(c, new.astype(c.dtype), slot)
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype),
+                                            (0, slot, 0, 0))
+
+    def body(x, layer):
+        lp, kc, vc = layer
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = (h @ lp["wq"]).reshape(b, 1, hq, dh)
+        k = (h @ lp["wk"]).reshape(b, 1, hkv, dh)
+        v = (h @ lp["wv"]).reshape(b, 1, hkv, dh)
+        q = shard(rope(q, positions, cfg.rope_theta), "batch", None,
+                  "heads", None)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = shard(write_cache(kc, k, slot), *_cache_logical(cfg))
+        vc = shard(write_cache(vc, v, slot), *_cache_logical(cfg))
+        o = dense_attention(q, kc, vc, causal=False, kv_len=kv_len)
+        x = x + o.reshape(b, 1, hq * dh) @ lp["wo"]
+        x, _ = _ffn_block(x, lp, cfg)
+        return shard(x, "batch", None, None), {"k": kc, "v": vc}
+
+    x, new_cache = _scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        cfg.n_layers, unroll_layers)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x @ params["unembed"], "batch", None, "vocab")
+    return logits, new_cache

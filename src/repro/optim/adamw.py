@@ -1,0 +1,77 @@
+"""AdamW + schedules, functional optax-style (init/update), pure JAX."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # storage dtype for mu/nu (math stays f32): "bfloat16" halves the
+    # optimizer footprint — the lightweight cousin of blockwise 8-bit
+    # Adam, needed to fit grok-scale state (Perf hillclimb).
+    state_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.dtype(self.state_dtype))
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        sd = jnp.dtype(self.state_dtype)
+        mu = jax.tree.map(
+            lambda m, g: (self.b1 * m.astype(jnp.float32)
+                          + (1 - self.b1) * g).astype(sd),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (self.b2 * v.astype(jnp.float32)
+                          + (1 - self.b2) * g * g).astype(sd),
+            state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            m, v = m.astype(jnp.float32), v.astype(jnp.float32)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step, mu, nu), gnorm
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,38 @@
+"""Perf-experiment toggles (EXPERIMENTS.md §Perf hypothesis loop).
+
+Flags are read from the REPRO_PERF env var (comma-separated,
+``name`` or ``name=value``) so a dry-run cell can be re-lowered under a
+candidate optimization without forking the model code:
+
+    REPRO_PERF=gather_weights,attn_chunk=2048 \
+        python -m repro.launch.dryrun --arch mixtral-8x7b ...
+
+Flags that win graduate to defaults; the flag stays as the off-switch
+documenting the before/after.
+"""
+from __future__ import annotations
+
+import os
+
+
+def _parse() -> dict:
+    out = {}
+    for item in os.environ.get("REPRO_PERF", "").split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "=" in item:
+            k, v = item.split("=", 1)
+            out[k] = v
+        else:
+            out[item] = "1"
+    return out
+
+
+def enabled(name: str) -> bool:
+    return _parse().get(name, "0") not in ("0", "", "false")
+
+
+def value(name: str, default=None, cast=str):
+    raw = _parse().get(name)
+    return default if raw is None else cast(raw)

@@ -1,0 +1,4 @@
+from .trainer import Trainer, TrainerConfig
+from . import checkpoint, compression
+
+__all__ = ["Trainer", "TrainerConfig", "checkpoint", "compression"]

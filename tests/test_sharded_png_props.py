@@ -1,0 +1,43 @@
+"""Property tests for the distributed (sharded) PNG layout —
+the §VII generalization's structural invariants, host-side only."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributed import build_sharded_png
+from repro.graphs.generators import rmat, uniform_random
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(5, 9),
+       st.sampled_from([2, 4, 8]), st.booleans())
+def test_sharded_png_invariants(seed, scale, shards, use_rmat):
+    g = (rmat(scale, 4, seed=seed % 1000) if use_rmat
+         else uniform_random(1 << scale, (1 << scale) * 4,
+                             seed=seed % 1000))
+    lay = build_sharded_png(g, shards)
+
+    # every edge appears exactly once across destination-shard streams
+    real_edges = int((lay.edge_dst < lay.shard_size).sum())
+    assert real_edges == g.num_edges
+
+    # dedup can only help: updates <= edges, on AND off the wire
+    total_updates = int((lay.send_ids >= 0).sum())
+    assert total_updates <= g.num_edges
+    assert lay.wire_updates <= lay.wire_edges
+    assert lay.wire_compression >= 1.0
+
+    # every real edge's receive-buffer slot points at a real update
+    u = lay.send_ids.shape[2]
+    flat_real = lay.send_ids.reshape(shards, -1) \
+        .transpose(1, 0)  # not used; keep send layout opaque
+    for s in range(shards):
+        e_mask = lay.edge_dst[s] < lay.shard_size
+        slots = lay.edge_upd[s][e_mask]
+        assert (slots < shards * u).all()
+        src_shard = slots // u
+        rank = slots % u
+        assert (lay.send_ids[src_shard, s, rank] >= 0).all()
+
+    # update source ids are valid local ids
+    valid = lay.send_ids[lay.send_ids >= 0]
+    assert (valid < lay.shard_size).all()

@@ -1,0 +1,188 @@
+"""Training/serving substrate: checkpoint atomicity + resume,
+failure-injection restart, gradient compression, serving engine,
+data-pipeline determinism."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.models import transformer as tf
+from repro.optim import AdamW, cosine_schedule
+from repro.train import Trainer, TrainerConfig, checkpoint, compression
+from repro.data import synthetic_lm_batches
+from repro.serve import ServeEngine, Request
+
+
+# ------------------------------------------------------------ checkpoint
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.asarray([1, 2], jnp.int32)}}
+        checkpoint.save(str(tmp_path), 7, tree)
+        restored, step = checkpoint.restore(str(tmp_path), tree)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        np.testing.assert_array_equal(np.asarray(restored["b"]["c"]),
+                                      np.asarray(tree["b"]["c"]))
+
+    def test_keep_last_n(self, tmp_path):
+        tree = {"x": jnp.zeros(3)}
+        for s in range(6):
+            checkpoint.save(str(tmp_path), s, tree, keep=2)
+        assert checkpoint.all_steps(str(tmp_path)) == [4, 5]
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        checkpoint.save(str(tmp_path), 0, {"x": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            checkpoint.restore(str(tmp_path), {"x": jnp.zeros((3,))})
+
+    def test_partial_write_never_corrupts(self, tmp_path):
+        tree = {"x": jnp.ones(4)}
+        checkpoint.save(str(tmp_path), 1, tree)
+        # a stray tmp file (crashed writer) must be ignored
+        open(os.path.join(tmp_path, ".tmp-99.npz"), "wb").write(b"junk")
+        restored, step = checkpoint.restore(str(tmp_path), tree)
+        assert step == 1
+
+
+# -------------------------------------------------------------- trainer
+def _tiny_setup(tmp_path, total_steps=12, ckpt_every=4, fail_at=None):
+    cfg = get("tinyllama-1.1b").scaled(n_layers=1, d_model=32, n_heads=2,
+                                       d_ff=64, vocab=64)
+    params = tf.init_lm(cfg, jax.random.key(0))
+    opt = AdamW(lr=1e-3)
+    state = (params, opt.init(params))
+    step = jax.jit(tf.make_train_step(cfg, opt))
+    data = synthetic_lm_batches(cfg.vocab, 2, 16, seed=3)
+
+    failed = {"done": False}
+
+    def failure_hook(s):
+        if fail_at is not None and s == fail_at and not failed["done"]:
+            failed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    tr = Trainer(TrainerConfig(total_steps=total_steps,
+                               checkpoint_every=ckpt_every,
+                               ckpt_dir=str(tmp_path), log_every=1000),
+                 step, state, data,
+                 failure_hook=failure_hook if fail_at else None,
+                 log_fn=lambda *a: None)
+    return tr, cfg, opt, step
+
+
+class TestTrainerFaultTolerance:
+    def test_failure_restart_bit_identical(self, tmp_path):
+        # run A: uninterrupted
+        tr_a, *_ = _tiny_setup(tmp_path / "a", total_steps=10,
+                               ckpt_every=5)
+        out_a = tr_a.run()
+        params_a = tr_a.state[0]
+
+        # run B: crash at step 7, then restart and resume
+        tr_b, *_ = _tiny_setup(tmp_path / "b", total_steps=10,
+                               ckpt_every=5, fail_at=7)
+        with pytest.raises(RuntimeError):
+            tr_b.run()
+        tr_c, *_ = _tiny_setup(tmp_path / "b", total_steps=10,
+                               ckpt_every=5)
+        assert tr_c.try_resume()
+        assert tr_c.step == 5
+        # data iterator must be fast-forwarded to the resume point —
+        # deterministic keyed data makes this a seek, not state restore
+        tr_c.data = synthetic_lm_batches(64, 2, 16, seed=3, start_step=5)
+        tr_c.run()
+        for la, lb in zip(jax.tree.leaves(params_a),
+                          jax.tree.leaves(tr_c.state[0])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_resume_without_checkpoint_is_false(self, tmp_path):
+        tr, *_ = _tiny_setup(tmp_path / "c")
+        assert not tr.try_resume()
+
+
+# ----------------------------------------------------------- compression
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+        ef = jnp.zeros_like(x)
+        q, scale, err = compression.compress(x, ef)
+        assert q.dtype == jnp.int8
+        x_hat = compression.decompress(q, scale)
+        assert float(jnp.abs(x - x_hat).max()) <= float(scale) * 0.5 + 1e-6
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """With EF, the AVERAGE of decompressed grads converges to the
+        average of true grads (residual is re-injected)."""
+        rng = np.random.default_rng(1)
+        g_true = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+        ef = jnp.zeros_like(g_true)
+        acc = jnp.zeros_like(g_true)
+        n = 200
+        for _ in range(n):
+            q, s, ef = compression.compress(g_true, ef)
+            acc = acc + compression.decompress(q, s)
+        np.testing.assert_allclose(np.asarray(acc / n),
+                                   np.asarray(g_true), atol=5e-3)
+
+    def test_tree_api(self):
+        grads = {"w": jnp.ones((4, 4)), "b": jnp.full((4,), -2.0)}
+        ef = compression.init_ef_state(grads)
+        out, new_ef = compression.compressed_gradients(grads, ef)
+        assert jax.tree.structure(out) == jax.tree.structure(grads)
+        np.testing.assert_allclose(np.asarray(out["w"]), 1.0, atol=1e-2)
+
+
+# -------------------------------------------------------------- serving
+class TestServeEngine:
+    def test_continuous_batching_matches_sequential(self):
+        cfg = get("tinyllama-1.1b").scaled(n_layers=1, d_model=32,
+                                           n_heads=2, d_ff=64, vocab=64)
+        params = tf.init_lm(cfg, jax.random.key(5))
+        rng = np.random.default_rng(2)
+        prompts = [list(map(int, rng.integers(1, 60, ln)))
+                   for ln in (5, 3, 7, 4, 6)]
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+        eng.run_until_drained(reqs)
+        assert all(r.done for r in reqs)
+
+        # oracle: single-request greedy decode via full forward
+        for r, prompt in zip(reqs, prompts):
+            toks = list(prompt)
+            for _ in range(len(r.generated)):
+                logits, _ = tf.forward(params, cfg,
+                                       jnp.asarray([toks], jnp.int32),
+                                       attn_path="dense")
+                toks.append(int(jnp.argmax(logits[0, -1])))
+            assert toks[len(prompt):] == r.generated, (
+                toks[len(prompt):], r.generated)
+
+    def test_slots_reused(self):
+        cfg = get("tinyllama-1.1b").scaled(n_layers=1, d_model=32,
+                                           n_heads=2, d_ff=64, vocab=64)
+        params = tf.init_lm(cfg, jax.random.key(6))
+        reqs = [Request(uid=i, prompt=[1 + i], max_new_tokens=2)
+                for i in range(6)]
+        eng = ServeEngine(cfg, params, batch_slots=2, max_len=16)
+        eng.run_until_drained(reqs)
+        assert all(r.done for r in reqs)
+
+
+# ----------------------------------------------------------------- data
+def test_data_determinism_and_seek():
+    it1 = synthetic_lm_batches(100, 2, 8, seed=9)
+    batches = [next(it1) for _ in range(5)]
+    it2 = synthetic_lm_batches(100, 2, 8, seed=9, start_step=3)
+    b3 = next(it2)
+    np.testing.assert_array_equal(np.asarray(batches[3]["tokens"]),
+                                  np.asarray(b3["tokens"]))
+    labels = np.asarray(batches[0]["labels"])
+    tokens = np.asarray(batches[0]["tokens"])
+    assert (labels[:, :-1] == tokens[:, 1:]).all()
