@@ -10,6 +10,7 @@ roofline analysis instead (EXPERIMENTS.md).
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,7 +25,15 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
                          "table7 dist e2e")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write the rows as structured JSON "
+                         "(perf-trajectory baseline, e.g. "
+                         "BENCH_pagerank.json)")
     args = ap.parse_args(argv)
+    if args.json:
+        # fail fast on an unwritable path without truncating an
+        # existing baseline (a crashed run must not destroy it)
+        open(args.json, "a").close()
 
     t0 = time.time()
     datasets = suite(args.scale)
@@ -60,8 +69,23 @@ def main(argv=None) -> int:
     for name in selected:
         print(f"# --- {name} ---", flush=True)
         out.extend(jobs[name]())
-    print(f"# total {time.time() - t0:.0f}s, {len(out.rows)} rows",
-          flush=True)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s, {len(out.rows)} rows", flush=True)
+    if args.json:
+        doc = {
+            "scale": args.scale,
+            "part_size": args.part_size,
+            "only": selected,
+            "total_seconds": round(total_s, 1),
+            "datasets": [{"name": d.name, "n": d.n, "m": d.m}
+                         for d in datasets],
+            "rows": [{"name": n, "us_per_call": round(us, 1),
+                      "derived": derived}
+                     for n, us, derived in out.rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {args.json}", flush=True)
     return 0
 
 

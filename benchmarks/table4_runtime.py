@@ -3,7 +3,9 @@ PDPR / BVGAS / PCPM, with the scatter/gather phase split.
 
 The phase split uses the two-phase engine (bins round-trip through
 memory, like the paper's bins round-trip through DRAM); the headline
-per-iteration time uses the production fused engine.
+per-iteration time uses the production fused engine — for PCPM that is
+the blocked hierarchical gather (the same SpMV the fused PageRank
+driver inlines into its `lax.while_loop`).
 """
 from __future__ import annotations
 
@@ -12,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.spmv import (SpMVEngine, bvgas_scatter, bvgas_gather,
-                             pcpm_scatter, pcpm_gather)
+                             pcpm_scatter, pcpm_gather_blocked)
 from .common import Csv, Dataset, timeit
 
 
@@ -27,9 +29,12 @@ def _phase_times(eng: SpMVEngine, x) -> tuple[float, float]:
         scatter = lambda: jax.block_until_ready(
             pcpm_scatter(eng._png.update_src, x))
         bins = pcpm_scatter(eng._png.update_src, x)
+        png = eng._png
         gather = lambda: jax.block_until_ready(
-            pcpm_gather(bins, eng._png.edge_update_idx, eng._png.edge_dst,
-                        num_nodes=eng.num_nodes))
+            pcpm_gather_blocked(bins, png.eui_padded, png.piece_start,
+                                png.piece_end, png.piece_dst,
+                                num_nodes=eng.num_nodes,
+                                block=png.gather_block))
     else:
         return 0.0, 0.0
     return timeit(scatter), timeit(gather)

@@ -1,15 +1,20 @@
 from .partition import Partitioning, partition_for_vmem
-from .png import PNGLayout, BlockedPNG, build_png, block_png
+from .png import (PNGLayout, BlockedPNG, GatherSchedule, build_png,
+                  block_png, build_gather_schedule)
 from .spmv import (SpMVEngine, pdpr_spmv, pcpm_spmv, pcpm_scatter,
-                   pcpm_gather, bvgas_scatter, bvgas_gather,
-                   pcpm_spmv_weighted, DevicePNG, DeviceCSC, DeviceBVGAS)
-from .pagerank import pagerank, pagerank_reference, PageRankResult
+                   pcpm_gather, pcpm_gather_blocked, bvgas_scatter,
+                   bvgas_gather, pcpm_spmv_weighted, DevicePNG,
+                   DeviceCSC, DeviceBVGAS)
+from .pagerank import (pagerank, pagerank_reference, PageRankResult,
+                       fused_power_iteration)
 from . import comm_model
 
 __all__ = [
     "Partitioning", "partition_for_vmem", "PNGLayout", "BlockedPNG",
-    "build_png", "block_png", "SpMVEngine", "pdpr_spmv", "pcpm_spmv",
-    "pcpm_scatter", "pcpm_gather", "bvgas_scatter", "bvgas_gather",
-    "pcpm_spmv_weighted", "DevicePNG", "DeviceCSC", "DeviceBVGAS",
-    "pagerank", "pagerank_reference", "PageRankResult", "comm_model",
+    "GatherSchedule", "build_png", "block_png", "build_gather_schedule",
+    "SpMVEngine", "pdpr_spmv", "pcpm_spmv", "pcpm_scatter",
+    "pcpm_gather", "pcpm_gather_blocked", "bvgas_scatter",
+    "bvgas_gather", "pcpm_spmv_weighted", "DevicePNG", "DeviceCSC",
+    "DeviceBVGAS", "pagerank", "pagerank_reference", "PageRankResult",
+    "fused_power_iteration", "comm_model",
 ]

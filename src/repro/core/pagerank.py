@@ -4,11 +4,25 @@ Matches the paper's algorithms: ranks are stored SCALED (PR/|N_o|)
 during iteration (alg. 1 line 3 / alg. 2) and unscaled at the end.
 Dangling nodes (|N_o| = 0) contribute nothing downstream, matching the
 paper's implicit behaviour; their own rank is still computed.
+
+Two drivers (DESIGN.md §4):
+
+- ``driver="fused"`` (default): the whole power iteration is ONE
+  donated, jitted ``lax.while_loop`` — rank buffers never leave the
+  device, the L1 residual is computed on device, and the ``tol`` early
+  exit is decided on device every ``check_every`` iterations.  Zero
+  host transfers inside the loop; one dispatch for the entire run.
+- ``driver="python"``: the original per-iteration Python loop, kept as
+  a debug fallback (and used automatically for ``two_phase`` engines,
+  whose host-side phase barrier cannot exist under jit).  It blocks on
+  a host float once per iteration.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,23 +37,106 @@ class PageRankResult:
     residuals: list
 
 
-def pagerank(g: Graph, *, method: str = "pcpm", num_iterations: int = 20,
-             damping: float = 0.85, part_size: int = 65536,
-             tol: float = 0.0, engine: SpMVEngine | None = None
-             ) -> PageRankResult:
-    eng = engine or SpMVEngine(g, method=method, part_size=part_size)
-    n = g.num_nodes
+def _inv_degree(g: Graph) -> jnp.ndarray:
     out_deg = np.asarray(g.out_degree)
-    inv_deg = jnp.asarray(
+    return jnp.asarray(
         np.where(out_deg == 0, 0.0, 1.0 / np.maximum(out_deg, 1))
     ).astype(jnp.float32)
 
+
+# ---------------------------------------------------------------------------
+# Fused driver
+# ---------------------------------------------------------------------------
+def fused_power_iteration(engine: SpMVEngine, *, damping: float = 0.85,
+                          num_iterations: int = 20, tol: float = 0.0,
+                          check_every: int = 1, multi: bool = False):
+    """Build (and cache on the engine) the jitted fused iteration loop.
+
+    Returns a callable ``run(pr0, inv_deg, base) -> (pr, it, residuals)``
+    where ``pr0`` is donated, ``base`` is the already-(1-damping)-scaled
+    teleport vector (same shape as ``pr0``; a uniform vector for plain
+    PageRank, per-column seed distributions for personalized queries),
+    and ``residuals`` is a (num_iterations,) device array with -1.0 in
+    slots where convergence was not checked.
+
+    With ``multi=True`` the state is (n, d) — d independent rank vectors
+    iterated in lockstep (the batched/personalized serving shape); the
+    recorded residual is the max over columns and the loop exits only
+    once every column is below ``tol``.
+
+    The L1 residual is evaluated every ``check_every`` iterations (and
+    on the last), so ``tol`` no longer costs a per-step reduction, let
+    alone the Python driver's per-step host sync.
+    """
+    key = ("fused", damping, num_iterations, tol, check_every, multi)
+    cached = engine._fused_cache.get(key)
+    if cached is not None:
+        return cached
+
+    spmv = engine.spmv_fn()
+    n = engine.num_nodes
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def run(pr, inv_deg, base):
+        if multi:
+            inv_deg = inv_deg[:, None]
+        residuals0 = jnp.full((max(num_iterations, 1),), -1.0,
+                              dtype=jnp.float32)
+
+        def cond(state):
+            it, _, _, done = state
+            return (it < num_iterations) & ~done
+
+        def body(state):
+            it, pr, residuals, done = state
+            spr = pr * inv_deg                  # scaled ranks (alg.1 l.3)
+            pr_next = base + damping * spmv(spr)
+            check = (((it + 1) % check_every == 0)
+                     | (it + 1 >= num_iterations))
+            res = jnp.where(
+                check, jnp.abs(pr_next - pr).sum(axis=0).max()
+                if multi else jnp.abs(pr_next - pr).sum(), -1.0)
+            residuals = residuals.at[it].set(res)
+            if tol > 0:
+                done = done | (check & (res >= 0) & (res < tol))
+            return it + 1, pr_next, residuals, done
+
+        it, pr, residuals, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), pr, residuals0, jnp.bool_(False)))
+        return pr, it, residuals
+
+    engine._fused_cache[key] = run
+    return run
+
+
+def _run_fused(g: Graph, eng: SpMVEngine, *, num_iterations: int,
+               damping: float, tol: float,
+               check_every: int) -> PageRankResult:
+    n = g.num_nodes
+    run = fused_power_iteration(eng, damping=damping,
+                                num_iterations=num_iterations, tol=tol,
+                                check_every=check_every)
+    pr0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    base = jnp.full((n,), (1.0 - damping) / n, dtype=jnp.float32)
+    pr, it, res = run(pr0, _inv_degree(g), base)
+    res_host = np.asarray(res)[:int(it)]
+    return PageRankResult(pr, int(it),
+                          [float(r) for r in res_host if r >= 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Python-loop driver (debug fallback; syncs on the host every iteration)
+# ---------------------------------------------------------------------------
+def _run_python(g: Graph, eng: SpMVEngine, *, num_iterations: int,
+                damping: float, tol: float) -> PageRankResult:
+    n = g.num_nodes
+    inv_deg = _inv_degree(g)
     pr = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     base = (1.0 - damping) / n
     residuals = []
     it = 0
     for it in range(1, num_iterations + 1):
-        spr = pr * inv_deg                    # scaled ranks (alg. 1 l. 3)
+        spr = pr * inv_deg
         pr_next = base + damping * eng(spr)   # A^T @ SPR
         res = float(jnp.abs(pr_next - pr).sum())
         residuals.append(res)
@@ -47,6 +144,21 @@ def pagerank(g: Graph, *, method: str = "pcpm", num_iterations: int = 20,
         if tol and res < tol:
             break
     return PageRankResult(pr, it, residuals)
+
+
+def pagerank(g: Graph, *, method: str = "pcpm", num_iterations: int = 20,
+             damping: float = 0.85, part_size: int = 65536,
+             tol: float = 0.0, engine: SpMVEngine | None = None,
+             driver: str = "fused", check_every: int = 1
+             ) -> PageRankResult:
+    eng = engine or SpMVEngine(g, method=method, part_size=part_size)
+    if driver == "python" or eng.two_phase:
+        return _run_python(g, eng, num_iterations=num_iterations,
+                           damping=damping, tol=tol)
+    if driver != "fused":
+        raise ValueError(f"unknown driver {driver!r}")
+    return _run_fused(g, eng, num_iterations=num_iterations,
+                      damping=damping, tol=tol, check_every=check_every)
 
 
 def pagerank_reference(g: Graph, *, num_iterations: int = 20,

@@ -14,6 +14,14 @@ Pallas kernel:
   edge_dst[M]          per edge: global destination node id
   edge_offsets[k+1]    edge range per destination partition
 
+The per-edge gather stream is sorted by destination node id (which is
+partition-major automatically, since partitions are contiguous ID
+ranges).  Sorted destinations make the gather phase's writes sequential
+— the paper's cache-friendly partition-resident accumulation — and let
+the device gather use the blocked segmented reduction of
+``build_gather_schedule`` instead of an element-wise scatter-add
+(DESIGN.md §3).
+
 The MSB/branch-avoidance trick (paper §IV-C) is replaced by the explicit
 ``edge_update_idx`` stream — same 4 B/edge, branch-free, full 2^32 ID
 space (DESIGN.md §2).
@@ -94,9 +102,73 @@ def build_png(g: Graph, part: Partitioning) -> PNGLayout:
     np.add.at(edge_offsets, dstp_s + 1, 1)
     np.cumsum(edge_offsets, out=edge_offsets)
 
-    return PNGLayout(part, update_src, update_offsets, edge_update_idx,
-                     dst_s.astype(np.int32), edge_offsets,
+    # Re-sort the gather stream by destination node.  Stable, so edges
+    # stay grouped by destination partition (partition = dst // psz is
+    # monotone in dst) and edge_offsets remain valid; edge_update_idx
+    # still points at the same (unchanged) update stream.
+    gorder = np.argsort(dst_s, kind="stable")
+
+    return PNGLayout(part, update_src, update_offsets,
+                     edge_update_idx[gorder],
+                     dst_s[gorder].astype(np.int32), edge_offsets,
                      g.num_nodes, g.num_edges)
+
+
+# ---------------------------------------------------------------------------
+# Blocked gather schedule — hierarchical segmented reduction (DESIGN.md §3).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GatherSchedule:
+    """Precomputed schedule for the blocked gather phase.
+
+    The dst-sorted edge stream is cut into fixed ``block``-sized chunks
+    (the XLA analogue of the paper's cache-resident partition): a
+    destination's contribution inside one chunk is a contiguous run, so
+    it equals a difference of the chunk-local inclusive prefix sum —
+    fully vectorized, and exact to f32 rounding because prefix
+    magnitudes stay chunk-local.  Runs are then combined with one small
+    scatter-add over ``num_pieces ≈ n + M/block`` entries instead of M.
+
+      edge_update_idx_padded[Mp]  update pointer, M padded to block mult
+      piece_start[P0], piece_end[P0]   inclusive run bounds (flat index)
+      piece_dst[P0]               global destination, pad = num_nodes
+    """
+    block: int
+    num_edges: int               # un-padded M
+    edge_update_idx_padded: np.ndarray  # (Mp,) int32, pad = 0 (inert)
+    piece_start: np.ndarray      # (P0,) int32
+    piece_end: np.ndarray        # (P0,) int32
+    piece_dst: np.ndarray        # (P0,) int32, pad = num_nodes
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.edge_update_idx_padded) // self.block
+
+
+def build_gather_schedule(layout: PNGLayout, *,
+                          block: int = 256) -> GatherSchedule:
+    """Cut the dst-sorted gather stream into per-block runs.
+
+    A new piece starts wherever the destination changes or a block
+    boundary is crossed; pad edges (index >= M) point at update 0 but
+    carry the ``num_nodes`` sentinel destination, so the final
+    segment-sum drops them.
+    """
+    m = layout.num_edges
+    mp = -(-max(m, 1) // block) * block
+    dst_pad = np.full(mp, layout.num_nodes, dtype=np.int32)
+    dst_pad[:m] = layout.edge_dst
+    eui_pad = np.zeros(mp, dtype=np.int32)
+    eui_pad[:m] = layout.edge_update_idx
+
+    new_piece = np.empty(mp, dtype=bool)
+    new_piece[0] = True
+    np.not_equal(dst_pad[1:], dst_pad[:-1], out=new_piece[1:])
+    new_piece[::block] = True
+    starts = np.flatnonzero(new_piece).astype(np.int32)
+    ends = np.append(starts[1:], mp).astype(np.int32) - 1
+    return GatherSchedule(block, m, eui_pad, starts, ends,
+                          dst_pad[starts])
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +194,8 @@ class BlockedPNG:
 
 
 def block_png(layout: PNGLayout) -> BlockedPNG:
+    """Vectorized re-layout: one scatter per stream, no per-partition
+    Python loop (preprocessing time is a paper headline, table VII)."""
     k = layout.num_partitions
     psz = layout.partitioning.part_size
     u_cnt = np.diff(layout.update_offsets)
@@ -131,12 +205,15 @@ def block_png(layout: PNGLayout) -> BlockedPNG:
     up = np.full((k, max_u), -1, dtype=np.int32)
     eu = np.full((k, max_e), max_u, dtype=np.int32)
     ed = np.full((k, max_e), psz, dtype=np.int32)
-    for p in range(k):
-        us, ue = layout.update_offsets[p], layout.update_offsets[p + 1]
-        es, ee = layout.edge_offsets[p], layout.edge_offsets[p + 1]
-        up[p, :ue - us] = layout.update_src[us:ue]
-        eu[p, :ee - es] = layout.edge_update_idx[es:ee] - us
-        ed[p, :ee - es] = layout.edge_dst[es:ee] - p * psz
+    # partition id + within-partition position of every update / edge
+    part_u = np.repeat(np.arange(k), u_cnt)
+    pos_u = np.arange(layout.num_updates) - layout.update_offsets[part_u]
+    part_e = np.repeat(np.arange(k), e_cnt)
+    pos_e = np.arange(layout.num_edges) - layout.edge_offsets[part_e]
+    up[part_u, pos_u] = layout.update_src
+    eu[part_e, pos_e] = (layout.edge_update_idx
+                         - layout.update_offsets[part_e])
+    ed[part_e, pos_e] = layout.edge_dst - part_e * psz
     u_pad = 1.0 - layout.num_updates / max(k * max_u, 1)
     e_pad = 1.0 - layout.num_edges / max(k * max_e, 1)
     return BlockedPNG(psz, up, eu, ed, u_pad, e_pad)

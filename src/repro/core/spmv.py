@@ -29,7 +29,8 @@ import numpy as np
 
 from ..graphs.formats import Graph
 from .partition import Partitioning
-from .png import PNGLayout, build_png
+from .png import (GatherSchedule, PNGLayout, block_png, build_png,
+                  build_gather_schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -67,22 +68,36 @@ class DeviceBVGAS:
 
 @dataclasses.dataclass(frozen=True)
 class DevicePNG:
-    """Flat PNG streams on device (see core/png.py)."""
+    """Flat PNG streams on device (see core/png.py), plus the blocked
+    gather schedule (piece bounds over the dst-sorted edge stream)."""
     num_nodes: int
     update_src: jnp.ndarray       # (U,) int32
     edge_update_idx: jnp.ndarray  # (M,) int32
-    edge_dst: jnp.ndarray         # (M,) int32
+    edge_dst: jnp.ndarray         # (M,) int32, ascending
     compression_ratio: float
+    # blocked-gather schedule (see png.build_gather_schedule)
+    gather_block: int
+    eui_padded: jnp.ndarray       # (Mp,) int32
+    piece_start: jnp.ndarray      # (P0,) int32
+    piece_end: jnp.ndarray        # (P0,) int32
+    piece_dst: jnp.ndarray        # (P0,) int32, pad = num_nodes
 
     @staticmethod
     def build(g: Graph, part: Partitioning,
-              layout: PNGLayout | None = None) -> "DevicePNG":
+              layout: PNGLayout | None = None, *,
+              gather_block: int = 256) -> "DevicePNG":
         layout = layout or build_png(g, part)
+        sched = build_gather_schedule(layout, block=gather_block)
         return DevicePNG(layout.num_nodes,
                          jnp.asarray(layout.update_src),
                          jnp.asarray(layout.edge_update_idx),
                          jnp.asarray(layout.edge_dst),
-                         layout.compression_ratio)
+                         layout.compression_ratio,
+                         sched.block,
+                         jnp.asarray(sched.edge_update_idx_padded),
+                         jnp.asarray(sched.piece_start),
+                         jnp.asarray(sched.piece_end),
+                         jnp.asarray(sched.piece_dst))
 
 
 # ---------------------------------------------------------------------------
@@ -118,15 +133,56 @@ def pcpm_scatter(update_src: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 def pcpm_gather(update_bins: jnp.ndarray, edge_update_idx: jnp.ndarray,
                 edge_dst: jnp.ndarray, *, num_nodes: int) -> jnp.ndarray:
     """Gather: expand each update over its in-partition destinations
-    (branch-free analogue of the MSB stream) and accumulate."""
+    (branch-free analogue of the MSB stream) and accumulate.
+
+    Flat element-wise scatter-add — kept as the shape-agnostic fallback
+    and for the paper's two-phase timing; the hot path is
+    ``pcpm_gather_blocked``.
+    """
     return jax.ops.segment_sum(update_bins[edge_update_idx], edge_dst,
                                num_segments=num_nodes)
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "block"))
+def pcpm_gather_blocked(update_bins: jnp.ndarray, eui_padded: jnp.ndarray,
+                        piece_start: jnp.ndarray, piece_end: jnp.ndarray,
+                        piece_dst: jnp.ndarray, *, num_nodes: int,
+                        block: int) -> jnp.ndarray:
+    """Hierarchical gather over the dst-sorted stream (DESIGN.md §3).
+
+    Per-block inclusive prefix sums turn each destination's run into a
+    difference of two gathers; only the ~n + M/block run sums hit the
+    element-wise scatter-add, which XLA:CPU executes serially.  ~9x
+    faster than the flat ``pcpm_gather`` at bench scale, identical to
+    f32 rounding.
+    """
+    vals = update_bins[eui_padded]                  # (Mp,) or (Mp, d)
+    nb = eui_padded.shape[0] // block
+    local = jnp.cumsum(
+        vals.reshape((nb, block) + vals.shape[1:]), axis=1
+    ).reshape(vals.shape)
+    lead = local[piece_end]
+    prev = local[jnp.maximum(piece_start - 1, 0)]
+    at_block_start = piece_start % block == 0
+    if vals.ndim > 1:
+        at_block_start = at_block_start[:, None]
+    piece_sum = lead - jnp.where(at_block_start, 0, prev)
+    return jax.ops.segment_sum(piece_sum, piece_dst,
+                               num_segments=num_nodes + 1,
+                               indices_are_sorted=True)[:num_nodes]
 
 
 @partial(jax.jit, static_argnames=("num_nodes", "fused"))
 def pcpm_spmv(png_update_src, png_edge_update_idx, png_edge_dst, x,
               *, num_nodes: int, fused: bool = True) -> jnp.ndarray:
+    """Two-phase PCPM SpMV.  ``fused=True`` (default) lets XLA fuse the
+    scatter into the gather's expansion; ``fused=False`` places an
+    optimization barrier between the phases so the m/r-entry update bins
+    materialize in HBM, reproducing the paper's bins-round-trip-through-
+    DRAM structure inside a single program."""
     bins = pcpm_scatter(png_update_src, x)
+    if not fused:
+        bins = jax.lax.optimization_barrier(bins)
     return pcpm_gather(bins, png_edge_update_idx, png_edge_dst,
                        num_nodes=num_nodes)
 
@@ -148,7 +204,12 @@ def pcpm_spmv_weighted(png_update_src, png_edge_update_idx, png_edge_dst,
 # Engine wrapper with a uniform API
 # ---------------------------------------------------------------------------
 class SpMVEngine:
-    """y = A^T x with a fixed graph; `method` in {pdpr, bvgas, pcpm}."""
+    """y = A^T x with a fixed graph.
+
+    ``method`` in {pdpr, bvgas, pcpm, pcpm_pallas}: the three paper
+    engines plus the Pallas-kernel PCPM path (tiled one-hot gather v2,
+    interpret-mode fallback off-TPU — see kernels/pcpm_spmv).
+    """
 
     def __init__(self, g: Graph, *, method: str = "pcpm",
                  part_size: int = 65536, two_phase: bool = False):
@@ -158,6 +219,7 @@ class SpMVEngine:
         self.two_phase = two_phase
         part = Partitioning(g.num_nodes, part_size)
         self.partitioning = part
+        self._fused_cache: dict = {}   # used by core.pagerank
         if method == "pdpr":
             self._csc = DeviceCSC.build(g)
         elif method == "bvgas":
@@ -165,19 +227,45 @@ class SpMVEngine:
         elif method == "pcpm":
             self.layout = build_png(g, part)
             self._png = DevicePNG.build(g, part, self.layout)
+        elif method == "pcpm_pallas":
+            from ..kernels.pcpm_spmv import pack_blocked
+            self.layout = build_png(g, part)
+            self._packed = pack_blocked(block_png(self.layout),
+                                        g.num_nodes)
         else:
             raise ValueError(f"unknown method {method!r}")
 
     @property
     def compression_ratio(self) -> float:
-        if self.method == "pcpm":
-            return self._png.compression_ratio
+        if self.method in ("pcpm", "pcpm_pallas"):
+            return self.layout.compression_ratio
         return 1.0
 
-    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+    def spmv_fn(self):
+        """A pure, traceable ``x -> A^T x`` closure over the device-
+        resident layout — what the fused `lax.while_loop` PageRank
+        driver and AOT compilation consume.  Ignores ``two_phase``
+        (a host-side timing barrier has no meaning under jit)."""
         if self.method == "pdpr":
-            return pdpr_spmv(self._csc.src, self._csc.dst, x,
-                             num_nodes=self.num_nodes)
+            csc, n = self._csc, self.num_nodes
+            return lambda x: pdpr_spmv(csc.src, csc.dst, x, num_nodes=n)
+        if self.method == "bvgas":
+            bv, n = self._bv, self.num_nodes
+            return lambda x: bvgas_gather(bvgas_scatter(bv.src, x),
+                                          bv.dst, num_nodes=n)
+        if self.method == "pcpm_pallas":
+            from ..kernels.pcpm_spmv import pcpm_spmv_pallas
+            packed = self._packed
+            return lambda x: pcpm_spmv_pallas(packed, x)
+        png, n = self._png, self.num_nodes
+        return lambda x: pcpm_gather_blocked(
+            pcpm_scatter(png.update_src, x), png.eui_padded,
+            png.piece_start, png.piece_end, png.piece_dst,
+            num_nodes=n, block=png.gather_block)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.method in ("pdpr", "pcpm_pallas"):
+            return self.spmv_fn()(x)
         if self.method == "bvgas":
             bins = bvgas_scatter(self._bv.src, x)
             if self.two_phase:
@@ -187,5 +275,7 @@ class SpMVEngine:
         bins = pcpm_scatter(self._png.update_src, x)
         if self.two_phase:
             bins = jax.block_until_ready(bins)
-        return pcpm_gather(bins, self._png.edge_update_idx,
-                           self._png.edge_dst, num_nodes=self.num_nodes)
+        return pcpm_gather_blocked(
+            bins, self._png.eui_padded, self._png.piece_start,
+            self._png.piece_end, self._png.piece_dst,
+            num_nodes=self.num_nodes, block=self._png.gather_block)

@@ -1,6 +1,7 @@
-from .kernel import pcpm_gather_pallas
+from .kernel import (default_interpret, pcpm_gather_pallas, pick_u_tile)
 from .ops import PackedPNG, pack_blocked, pcpm_spmv_pallas
 from .ref import pcpm_gather_ref
 
-__all__ = ["pcpm_gather_pallas", "PackedPNG", "pack_blocked",
-           "pcpm_spmv_pallas", "pcpm_gather_ref"]
+__all__ = ["default_interpret", "pcpm_gather_pallas", "pick_u_tile",
+           "PackedPNG", "pack_blocked", "pcpm_spmv_pallas",
+           "pcpm_gather_ref"]

@@ -1,27 +1,34 @@
-"""PCPM gather phase as a Pallas TPU kernel.
+"""PCPM gather phase as a Pallas TPU kernel (v2: tiled update gather).
 
 TPU-native adaptation of paper alg. 5 (see DESIGN.md §2):
 
 - one destination partition's accumulator lives in VMEM for the whole
   pass (the paper's cache-resident partition);
-- the update bin for that partition is VMEM-resident (paper: bins are
-  streamed; here a partition's compressed bin fits VMEM because it is
-  m/r-sized);
+- the update bin for that partition streams through VMEM one lane-sized
+  ``u_tile`` slice at a time (v2 — v1 expanded a full (Eb, U) one-hot
+  per edge block, which scales VMEM and MXU work with U instead of with
+  the tile);
 - the per-edge (update_idx, dst_local) streams are consumed in blocks;
 - BOTH the update gather and the destination scatter are expressed as
   one-hot matmuls on the MXU — the branch-free replacement for the
   paper's MSB pointer trick (TPU vector lanes have no cheap data-
   dependent branch; redundant MXU FLOPs are free relative to HBM).
 
-Grid: (num_partitions, num_edge_blocks); edge blocks iterate innermost
-so the accumulator block is revisited (Pallas keeps it in VMEM across
-consecutive grid steps with the same index_map output).
+Grid: (num_partitions, num_edge_blocks, num_update_tiles); update tiles
+iterate innermost, accumulating gathered values for the current edge
+block into a VMEM scratch, and the destination scatter fires on the
+last tile.  The partition accumulator block is revisited across the two
+inner grid axes (Pallas keeps it in VMEM across consecutive grid steps
+with the same index_map output).
 
 Shapes (all static, built by core.png.block_png + ops.pack_blocked):
   bins:        (k, U, d)   per-partition compressed update values
   edge_upd:    (k, E_blocks, Eb) int32, pad = U   (one-hot row -> 0)
   edge_dst:    (k, E_blocks, Eb) int32, pad = P   (one-hot row -> 0)
   out:         (k, P, d)   per-partition accumulated values
+
+``interpret=None`` auto-selects the compiled kernel on TPU backends and
+the Pallas interpreter everywhere else (CPU CI, tests).
 """
 from __future__ import annotations
 
@@ -30,57 +37,90 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _gather_kernel(edge_upd_ref, edge_dst_ref, bins_ref, out_ref, *,
-                   part_size: int, num_updates: int):
+def default_interpret() -> bool:
+    """Interpreter fallback policy: compiled on TPU, interpreted off it."""
+    return jax.default_backend() != "tpu"
+
+
+def pick_u_tile(num_updates: int, *, preferred: int = 512,
+                lane: int = 128) -> int:
+    """Largest lane-multiple tile <= preferred that divides U."""
+    for cand in range(min(preferred, num_updates), lane - 1, -lane):
+        if num_updates % cand == 0:
+            return cand
+    return num_updates
+
+
+def _gather_kernel(edge_upd_ref, edge_dst_ref, bins_ref, out_ref,
+                   vals_ref, *, part_size: int, u_tile: int,
+                   num_u_tiles: int):
     e = pl.program_id(1)
+    u = pl.program_id(2)
 
-    @pl.when(e == 0)
-    def _init():
+    @pl.when((e == 0) & (u == 0))
+    def _init_out():
         out_ref[...] = jnp.zeros_like(out_ref)
 
+    @pl.when(u == 0)
+    def _init_vals():
+        vals_ref[...] = jnp.zeros_like(vals_ref)
+
     upd_idx = edge_upd_ref[0, 0, :]                       # (Eb,)
-    dst_idx = edge_dst_ref[0, 0, :]                       # (Eb,)
-    bins = bins_ref[0]                                    # (U, d)
+    bins = bins_ref[0]                                    # (u_tile, d)
     eb = upd_idx.shape[0]
 
-    # gather-as-matmul: (Eb, U) @ (U, d) -> (Eb, d)
-    iota_u = jax.lax.broadcasted_iota(jnp.int32, (eb, num_updates), 1)
-    oh_upd = (upd_idx[:, None] == iota_u).astype(bins.dtype)
-    vals = jax.lax.dot(oh_upd, bins,
-                       preferred_element_type=jnp.float32)
+    # tiled gather-as-matmul: (Eb, u_tile) @ (u_tile, d) -> (Eb, d).
+    # Pad indices (== U) match no tile and contribute zero rows.
+    iota_u = (jax.lax.broadcasted_iota(jnp.int32, (eb, u_tile), 1)
+              + u * u_tile)
+    oh_upd = (upd_idx[:, None] == iota_u).astype(jnp.float32)
+    vals_ref[...] += jax.lax.dot(oh_upd, bins.astype(jnp.float32),
+                                 preferred_element_type=jnp.float32)
 
-    # scatter-as-matmul: (P, Eb) @ (Eb, d) -> (P, d)
-    iota_p = jax.lax.broadcasted_iota(jnp.int32, (eb, part_size), 1)
-    oh_dst = (dst_idx[:, None] == iota_p).astype(bins.dtype)
-    out_ref[0] += jax.lax.dot(oh_dst.T, vals,
-                              preferred_element_type=jnp.float32
-                              ).astype(out_ref.dtype)
+    @pl.when(u == num_u_tiles - 1)
+    def _scatter():
+        # scatter-as-matmul: (P, Eb) @ (Eb, d) -> (P, d)
+        dst_idx = edge_dst_ref[0, 0, :]                   # (Eb,)
+        iota_p = jax.lax.broadcasted_iota(jnp.int32, (eb, part_size), 1)
+        oh_dst = (dst_idx[:, None] == iota_p).astype(jnp.float32)
+        out_ref[0] += jax.lax.dot(
+            oh_dst.T, vals_ref[...],
+            preferred_element_type=jnp.float32).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("part_size", "edge_block", "interpret"))
+                   static_argnames=("part_size", "u_tile", "interpret"))
 def pcpm_gather_pallas(bins: jnp.ndarray, edge_upd: jnp.ndarray,
                        edge_dst: jnp.ndarray, *, part_size: int,
-                       edge_block: int = 512,
-                       interpret: bool = True) -> jnp.ndarray:
+                       u_tile: int | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
     """bins: (k, U, d); edge_upd/edge_dst: (k, n_eb, Eb) -> (k, P, d)."""
+    if interpret is None:
+        interpret = default_interpret()
     k, num_updates, d = bins.shape
     _, n_eb, eb = edge_upd.shape
     assert edge_dst.shape == edge_upd.shape
-    grid = (k, n_eb)
+    if u_tile is None:
+        u_tile = pick_u_tile(num_updates)
+    assert num_updates % u_tile == 0, (num_updates, u_tile)
+    n_ut = num_updates // u_tile
+    grid = (k, n_eb, n_ut)
     kernel = functools.partial(_gather_kernel, part_size=part_size,
-                               num_updates=num_updates)
+                               u_tile=u_tile, num_u_tiles=n_ut)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, eb), lambda p, e: (p, e, 0)),
-            pl.BlockSpec((1, 1, eb), lambda p, e: (p, e, 0)),
-            pl.BlockSpec((1, num_updates, d), lambda p, e: (p, 0, 0)),
+            pl.BlockSpec((1, 1, eb), lambda p, e, u: (p, e, 0)),
+            pl.BlockSpec((1, 1, eb), lambda p, e, u: (p, e, 0)),
+            pl.BlockSpec((1, u_tile, d), lambda p, e, u: (p, u, 0)),
         ],
-        out_specs=pl.BlockSpec((1, part_size, d), lambda p, e: (p, 0, 0)),
+        out_specs=pl.BlockSpec((1, part_size, d),
+                               lambda p, e, u: (p, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((k, part_size, d), bins.dtype),
+        scratch_shapes=[pltpu.VMEM((eb, d), jnp.float32)],
         interpret=interpret,
     )(edge_upd, edge_dst, bins)

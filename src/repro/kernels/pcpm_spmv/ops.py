@@ -60,11 +60,18 @@ def pack_blocked(blocked: BlockedPNG, num_nodes: int, *,
         jnp.asarray(ed.reshape(k, n_eb, edge_block)))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "use_kernel", "u_tile"))
 def pcpm_spmv_pallas(packed: PackedPNG, x: jnp.ndarray, *,
-                     interpret: bool = True,
-                     use_kernel: bool = True) -> jnp.ndarray:
-    """y = A^T x. x: (n,) or (n, d). Returns same leading shape."""
+                     interpret: bool | None = None,
+                     use_kernel: bool = True,
+                     u_tile: int | None = None) -> jnp.ndarray:
+    """y = A^T x. x: (n,) or (n, d) with any d >= 1 (multi-vector /
+    personalized-query batches; d is padded to the 128-lane boundary).
+
+    ``interpret=None`` compiles the kernel on TPU and falls back to the
+    Pallas interpreter elsewhere (kernel.default_interpret).
+    """
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
@@ -76,10 +83,11 @@ def pcpm_spmv_pallas(packed: PackedPNG, x: jnp.ndarray, *,
     # (src, dst-partition) pair, the paper's update_bins.
     bins = x[packed.update_src] * packed.update_valid[..., None]
     fn = pcpm_gather_pallas if use_kernel else (
-        lambda b, eu, ed, part_size, interpret=None, **kw:
+        lambda b, eu, ed, part_size, interpret=None, u_tile=None:
         pcpm_gather_ref(b, eu, ed, part_size=part_size))
     out = fn(bins, packed.edge_upd, packed.edge_dst,
-             part_size=packed.part_size, interpret=interpret)
+             part_size=packed.part_size, interpret=interpret,
+             u_tile=u_tile)
     y = out.reshape(-1, d_pad)[:n, :d]
     return y[:, 0] if squeeze else y
 

@@ -1,3 +1,3 @@
-from .engine import ServeEngine, Request
+from .engine import PageRankServer, ServeEngine, Request
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["PageRankServer", "ServeEngine", "Request"]

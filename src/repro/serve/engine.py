@@ -1,12 +1,20 @@
-"""Batched serving engine with continuous-batching slot management.
+"""Serving engines.
 
-A fixed pool of B slots shares one stacked KV cache (static shapes — the
-TPU constraint).  Requests are admitted into free slots; their prompts
-are prefilled token-by-token into the slot's cache region (per-slot
-positions via the vectorized decode path), then all active slots decode
-in lockstep.  Finished slots (EOS or max_new_tokens) free immediately
-and can be re-admitted without disturbing neighbours — the vLLM-style
-schedule reduced to its TPU-static essentials.
+1. ``PageRankServer`` — batched (personalized) PageRank queries over a
+   fixed graph: the fused `lax.while_loop` power iteration is AOT
+   compiled (``.lower().compile()``) once at construction, so a request
+   pays zero trace/compile cost — it is one executable dispatch over
+   donated device buffers (DESIGN.md §4).
+
+2. ``ServeEngine`` — batched LM serving with continuous-batching slot
+   management: a fixed pool of B slots shares one stacked KV cache
+   (static shapes — the TPU constraint).  Requests are admitted into
+   free slots; their prompts are prefilled token-by-token into the
+   slot's cache region (per-slot positions via the vectorized decode
+   path), then all active slots decode in lockstep.  Finished slots
+   (EOS or max_new_tokens) free immediately and can be re-admitted
+   without disturbing neighbours — the vLLM-style schedule reduced to
+   its TPU-static essentials.
 """
 from __future__ import annotations
 
@@ -18,7 +26,82 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import LMConfig
+from ..core.pagerank import _inv_degree, fused_power_iteration
+from ..core.spmv import SpMVEngine
+from ..graphs.formats import Graph
 from ..models import transformer as tf
+
+
+# ---------------------------------------------------------------------------
+# PageRank serving
+# ---------------------------------------------------------------------------
+class PageRankServer:
+    """Serve (personalized) PageRank queries from a pre-compiled fused
+    iteration loop.
+
+    ``batch`` > 1 serves a batch of personalization (seed) vectors in
+    lockstep as one (n, batch) multi-vector iteration — the PCPM SpMV
+    engines and the Pallas kernel are multi-vector native, so a batch
+    costs one SpMV pass, not ``batch`` passes.
+
+    Construction does all the expensive work once: PNG build, engine
+    layout upload, trace + lowering + compilation (``jax.jit(...)
+    .lower(...).compile()``).  ``query()`` only stages already-compiled
+    device work; it never retraces (``trace_count`` stays fixed, see
+    tests/test_fused_pagerank.py).
+    """
+
+    def __init__(self, g: Graph, *, method: str = "pcpm_pallas",
+                 part_size: int = 65536, batch: int = 1,
+                 damping: float = 0.85, num_iterations: int = 20,
+                 tol: float = 0.0, check_every: int = 1,
+                 engine: SpMVEngine | None = None):
+        self.g = g
+        self.n = g.num_nodes
+        self.batch = batch
+        self.damping = damping
+        self.engine = engine or SpMVEngine(g, method=method,
+                                           part_size=part_size)
+        self.trace_count = 0
+        multi = batch > 1
+        run = fused_power_iteration(
+            self.engine, damping=damping, num_iterations=num_iterations,
+            tol=tol, check_every=check_every, multi=multi)
+
+        def counted(pr, inv_deg, base):
+            self.trace_count += 1           # increments only at trace time
+            return run.__wrapped__(pr, inv_deg, base)
+
+        self._inv_deg = _inv_degree(g)
+        shape = (self.n, batch) if multi else (self.n,)
+        spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+        inv_spec = jax.ShapeDtypeStruct((self.n,), jnp.float32)
+        self._compiled = (jax.jit(counted, donate_argnums=(0,))
+                          .lower(spec, inv_spec, spec).compile())
+
+    def query(self, seeds: np.ndarray | None = None):
+        """Rank one batch.  ``seeds``: (n, batch) per-query teleport
+        distributions (columns need not be normalized — they are), or
+        None for the uniform-teleport batch.  Returns (ranks, iters,
+        residuals) with ranks of shape (n, batch) (or (n,) when
+        ``batch == 1``) and residuals as in ``PageRankResult`` (one
+        float per convergence check, in iteration order)."""
+        shape = (self.n, self.batch) if self.batch > 1 else (self.n,)
+        if seeds is None:
+            v = jnp.full(shape, 1.0 / self.n, dtype=jnp.float32)
+        else:
+            host = np.asarray(seeds, dtype=np.float32).reshape(shape)
+            sums = host.sum(axis=0)
+            if not (np.isfinite(sums).all() and (sums > 0).all()):
+                raise ValueError(
+                    "every seed column must be finite with positive "
+                    f"mass; got column sums {sums!r}")
+            v = jnp.asarray(host / sums)
+        pr, it, res = self._compiled(v, self._inv_deg,
+                                     (1.0 - self.damping) * v)
+        it = int(it)
+        res_host = np.asarray(res)[:it]
+        return pr, it, [float(r) for r in res_host if r >= 0.0]
 
 
 @dataclasses.dataclass

@@ -1,9 +1,12 @@
 """Core PCPM correctness: PNG layout invariants, engine equivalence,
-PageRank vs dense oracle, paper-example graph."""
+PageRank vs dense oracle, paper-example graph.
+
+Hypothesis-based property tests live in test_engine_props.py so this
+module stays collectable without the [test] extra's ``hypothesis``.
+"""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
 from repro.graphs import Graph, from_edge_list, generators
 from repro.core import (Partitioning, build_png, block_png, SpMVEngine,
@@ -141,21 +144,6 @@ class TestEngineEquivalence:
         src_of_edge = png.update_src[png.edge_update_idx]
         np.add.at(A, (src_of_edge, png.edge_dst), w)
         np.testing.assert_allclose(y, A.T @ x, rtol=2e-4)
-
-    @settings(max_examples=20, deadline=None)
-    @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 7),
-           st.sampled_from([4, 16, 64]))
-    def test_property_engines_agree(self, seed, scale, part_size):
-        """Property: all three engines compute the same y for random
-        graphs, including empty partitions, self-loops, multi-edges."""
-        g = generators.rmat(scale, 4, seed=seed)
-        x = jnp.asarray(np.random.default_rng(seed).random(
-            g.num_nodes).astype(np.float32))
-        ys = [np.asarray(SpMVEngine(g, method=m, part_size=part_size)(x))
-              for m in ("pdpr", "bvgas", "pcpm")]
-        np.testing.assert_allclose(ys[0], ys[1], rtol=2e-4, atol=1e-6)
-        np.testing.assert_allclose(ys[0], ys[2], rtol=2e-4, atol=1e-6)
-
 
 # --------------------------------------------------------------- pagerank
 class TestPageRank:

@@ -1,0 +1,27 @@
+"""Hypothesis property tests for engine equivalence (split out of
+test_core_pcpm.py so that module collects without ``hypothesis``)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the [test] extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import generators
+from repro.core import SpMVEngine
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 7),
+       st.sampled_from([4, 16, 64]))
+def test_property_engines_agree(seed, scale, part_size):
+    """Property: all engines compute the same y for random graphs,
+    including empty partitions, self-loops, multi-edges."""
+    g = generators.rmat(scale, 4, seed=seed)
+    x = jnp.asarray(np.random.default_rng(seed).random(
+        g.num_nodes).astype(np.float32))
+    ys = [np.asarray(SpMVEngine(g, method=m, part_size=part_size)(x))
+          for m in ("pdpr", "bvgas", "pcpm")]
+    np.testing.assert_allclose(ys[0], ys[1], rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(ys[0], ys[2], rtol=2e-4, atol=1e-6)

@@ -1,6 +1,10 @@
 """Property tests for the distributed (sharded) PNG layout —
 the §VII generalization's structural invariants, host-side only."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.distributed import build_sharded_png
