@@ -24,7 +24,11 @@ def main(argv=None) -> int:
                     help="default: n/64 (paper-regime partition count)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
-                         "table7 dist e2e")
+                         "table7 dist e2e sharded")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="enable the sharded fused-loop comparison "
+                         "with N shards (clamped to visible devices; "
+                         "force host devices via XLA_FLAGS)")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="also write the rows as structured JSON "
                          "(perf-trajectory baseline, e.g. "
@@ -47,7 +51,8 @@ def main(argv=None) -> int:
 
     from . import (table4_runtime, fig8_comm, table5_locality,
                    table6_comm_locality, fig12_partition_sweep,
-                   table7_preproc, dist_wire, pagerank_e2e)
+                   table7_preproc, dist_wire, pagerank_e2e,
+                   sharded_loop)
     jobs = {
         "table4": lambda: table4_runtime.run(
             datasets, part_size=args.part_size),
@@ -63,8 +68,15 @@ def main(argv=None) -> int:
         "dist": lambda: dist_wire.run(datasets),
         "e2e": lambda: pagerank_e2e.run(datasets[:2],
                                         part_size=args.part_size),
+        "sharded": lambda: sharded_loop.run(
+            datasets[:2], num_shards=args.shards,
+            part_size=args.part_size),
     }
-    selected = args.only or list(jobs)
+    selected = args.only or [j for j in jobs if j != "sharded"]
+    if args.shards and "sharded" not in selected:
+        selected = selected + ["sharded"]
+    if "sharded" in selected and args.shards is None:
+        args.shards = 8          # job default, recorded in the JSON doc
     out = Csv()
     for name in selected:
         print(f"# --- {name} ---", flush=True)
@@ -75,6 +87,7 @@ def main(argv=None) -> int:
         doc = {
             "scale": args.scale,
             "part_size": args.part_size,
+            "shards": args.shards,
             "only": selected,
             "total_seconds": round(total_s, 1),
             "datasets": [{"name": d.name, "n": d.n, "m": d.m}

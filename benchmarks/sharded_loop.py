@@ -1,0 +1,56 @@
+"""Beyond-paper table: the sharded fused PageRank loop (DESIGN.md §6).
+
+Per dataset, reports the single-device fused-loop baseline against the
+``num_shards``-way sharded fused loop (all-to-all scatter + blocked
+local gather + psum residual, one donated `lax.while_loop` dispatch),
+plus the wire stats of the sharded layout.  ``us_per_call`` is
+per-iteration time (total loop time / iterations), so the two rows are
+directly comparable.
+
+On a single host this measures the SPMD overhead floor (forced host
+devices share the one CPU); on a real mesh the same program measures
+interconnect scaling.  Shard count is clamped to the visible device
+count — run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+to get N shards on CPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Csv, Dataset, timeit
+
+
+def run(datasets: list[Dataset], *, num_shards: int = 8,
+        part_size: int = 65536, num_iterations: int = 10) -> Csv:
+    import jax
+    from repro.core import SpMVEngine, pagerank
+
+    avail = jax.device_count()
+    shards = min(num_shards, avail)
+    if shards < num_shards:
+        print(f"# sharded: clamped {num_shards} -> {shards} shards "
+              f"({avail} devices visible)", flush=True)
+
+    csv = Csv()
+    for ds in datasets:
+        g = ds.graph
+        eng_1 = SpMVEngine(g, method="pcpm", part_size=part_size)
+        t1 = timeit(lambda: np.asarray(pagerank(
+            g, engine=eng_1, num_iterations=num_iterations).ranks),
+            warmup=1, iters=3)
+        csv.add(f"sharded/{ds.name}/fused_1dev", t1 / num_iterations,
+                f"iters={num_iterations}")
+
+        eng_s = SpMVEngine(g, method="pcpm_sharded", num_shards=shards)
+        layout = eng_s.sharded_layout
+        ts = timeit(lambda: np.asarray(pagerank(
+            g, engine=eng_s, num_iterations=num_iterations).ranks),
+            warmup=1, iters=3)
+        d_v = 4
+        csv.add(f"sharded/{ds.name}/fused_{shards}dev",
+                ts / num_iterations,
+                f"r_wire={layout.wire_compression:.2f}"
+                f",pcpmMB={layout.wire_updates * d_v / 1e6:.1f}"
+                f",edgecutMB={layout.wire_edges * 2 * d_v / 1e6:.1f}"
+                f",vs1dev={t1 / max(ts, 1e-12):.2f}x")
+    return csv

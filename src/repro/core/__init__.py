@@ -1,6 +1,7 @@
 from .partition import Partitioning, partition_for_vmem
 from .png import (PNGLayout, BlockedPNG, GatherSchedule, build_png,
-                  block_png, build_gather_schedule)
+                  block_png, build_gather_schedule,
+                  flat_gather_schedule)
 from .spmv import (SpMVEngine, pdpr_spmv, pcpm_spmv, pcpm_scatter,
                    pcpm_gather, pcpm_gather_blocked, bvgas_scatter,
                    bvgas_gather, pcpm_spmv_weighted, DevicePNG,
@@ -12,6 +13,7 @@ from . import comm_model
 __all__ = [
     "Partitioning", "partition_for_vmem", "PNGLayout", "BlockedPNG",
     "GatherSchedule", "build_png", "block_png", "build_gather_schedule",
+    "flat_gather_schedule",
     "SpMVEngine", "pdpr_spmv", "pcpm_spmv", "pcpm_scatter",
     "pcpm_gather", "pcpm_gather_blocked", "bvgas_scatter",
     "bvgas_gather", "pcpm_spmv_weighted", "DevicePNG", "DeviceCSC",

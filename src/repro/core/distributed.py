@@ -1,12 +1,20 @@
 """Distributed PCPM: the paper's communication-volume reduction lifted
-from DRAM traffic to interconnect traffic (DESIGN.md §2).
+from DRAM traffic to interconnect traffic (DESIGN.md §6).
 
 Vertices are sharded contiguously over a mesh axis.  The PNG build at
 shard granularity produces, per (source-shard s, destination-shard t),
 the DEDUPLICATED update list — each source vertex's value crosses the
 wire once per destination shard instead of once per cross-shard edge
 (compression r on the wire).  The scatter phase is one all-to-all of
-dense compressed buffers; the gather phase is a local segment-sum.
+dense compressed buffers; the gather phase is the shard-local blocked
+hierarchical reduction of DESIGN.md §3 over a dst-sorted edge stream.
+
+``sharded_power_iteration`` is the device-resident iteration engine:
+the WHOLE power iteration is one donated, jitted ``lax.while_loop``
+whose body runs scatter + all-to-all + blocked gather under
+``shard_map``; the L1 residual (and dangling-node mass) is combined
+across shards with ``psum`` so ``tol`` early exit is decided on device
+with zero host round-trips (DESIGN.md §6).
 
 ``edge_cut_spmv`` is the distributed BVGAS analogue (one update PER
 EDGE on the wire) used as the communication baseline.
@@ -14,7 +22,7 @@ EDGE on the wire) used as the communication baseline.
 from __future__ import annotations
 
 import dataclasses
-import functools
+from functools import partial
 
 import numpy as np
 import jax
@@ -23,6 +31,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..graphs.formats import Graph
+from .png import flat_gather_schedule
+from .spmv import pcpm_gather_blocked
 
 
 # ---------------------------------------------------------------- layout
@@ -34,8 +44,14 @@ class ShardedPNG:
                                to shard t (pad -1 -> zero value)
     edge_upd  (S, E) int32:    per dst shard, index into its receive
                                buffer (concat over s, row-major), pad
-                               points at S*U (zero slot)
-    edge_dst  (S, E) int32:    local destination ids, pad = shard_size
+                               points at S*U (zero slot); dst-sorted
+                               within each shard
+    edge_dst  (S, E) int32:    local destination ids, ascending per
+                               shard, pad = shard_size
+
+    plus the per-shard blocked gather schedule (DESIGN.md §3 applied
+    shard-locally): the dst-sorted stream padded to a ``gather_block``
+    multiple and cut into contiguous same-destination runs.
     """
     num_shards: int
     shard_size: int
@@ -43,6 +59,12 @@ class ShardedPNG:
     send_ids: np.ndarray
     edge_upd: np.ndarray
     edge_dst: np.ndarray
+    # blocked gather schedule, per shard
+    gather_block: int
+    eui_padded: np.ndarray     # (S, Mp) int32, pad -> S*U zero slot
+    piece_start: np.ndarray    # (S, P0) int32
+    piece_end: np.ndarray      # (S, P0) int32
+    piece_dst: np.ndarray      # (S, P0) int32, pad = shard_size
     # stats
     wire_updates: int      # deduplicated cross-shard update count (PCPM)
     wire_edges: int        # cross-shard edge count (edge-cut baseline)
@@ -51,8 +73,13 @@ class ShardedPNG:
     def wire_compression(self) -> float:
         return self.wire_edges / max(self.wire_updates, 1)
 
+    @property
+    def padded_nodes(self) -> int:
+        return self.num_shards * self.shard_size
 
-def build_sharded_png(g: Graph, num_shards: int) -> ShardedPNG:
+
+def build_sharded_png(g: Graph, num_shards: int, *,
+                      gather_block: int = 256) -> ShardedPNG:
     shard_size = -(-g.num_nodes // num_shards)
     src = g.src.astype(np.int64)
     dst = g.dst.astype(np.int64)
@@ -68,13 +95,8 @@ def build_sharded_png(g: Graph, num_shards: int) -> ShardedPNG:
     if len(pair_key):
         new[0] = True
         np.not_equal(pair_key[1:], pair_key[:-1], out=new[1:])
-    upd_rank_within_pair = np.empty(len(pair_key), dtype=np.int64)
     # rank of each update within its (s, t) group
     grp_key = dsh_o * num_shards + ssh_o
-    grp_start = np.empty(len(grp_key), dtype=bool)
-    if len(grp_key):
-        grp_start[0] = True
-        np.not_equal(grp_key[1:], grp_key[:-1], out=grp_start[1:])
     upd_idx_global = np.cumsum(new) - 1
     grp_of_upd = grp_key[new]
     # per-update rank within its group
@@ -98,68 +120,117 @@ def build_sharded_png(g: Graph, num_shards: int) -> ShardedPNG:
     send_ids[upd_ssh, upd_dsh, upd_rank] = (upd_src
                                             - upd_ssh * shard_size)
 
-    # --- per-dst-shard edge streams referencing the receive buffer
-    # receive buffer at shard t: rows s = send_ids[s, t] -> flat s*U + r
+    # --- per-dst-shard edge streams referencing the receive buffer.
+    # Receive buffer at shard t: rows s = send_ids[s, t] -> flat s*U + r.
     upd_slot = upd_ssh * u_max + upd_rank          # slot within dst buffer
     edge_slot = upd_slot[upd_idx_global]           # per edge (sorted order)
+    # Re-sort the gather stream by destination node within each shard so
+    # the shard-local gather can use the blocked run reduction
+    # (DESIGN.md §3); edge_slot still points at the same receive slots.
+    gorder = np.lexsort((dst_o, dsh_o))
+    dsh_g = dsh_o[gorder]
+    dst_g = dst_o[gorder]
+    slot_g = edge_slot[gorder]
     e_counts = np.zeros(num_shards, dtype=np.int64)
-    np.add.at(e_counts, dsh_o, 1)
+    np.add.at(e_counts, dsh_g, 1)
     e_max = max(int(e_counts.max(initial=0)), 1)
-    edge_upd = np.full((num_shards, e_max), num_shards * u_max,
-                       dtype=np.int32)
+    zero_slot = num_shards * u_max
+    edge_upd = np.full((num_shards, e_max), zero_slot, dtype=np.int32)
     edge_dst = np.full((num_shards, e_max), shard_size, dtype=np.int32)
-    e_first = np.zeros(len(dsh_o), dtype=np.int64)
-    if len(dsh_o):
-        starts = np.flatnonzero(np.r_[True, dsh_o[1:] != dsh_o[:-1]])
-        sizes = np.diff(np.r_[starts, len(dsh_o)])
-        e_first = np.repeat(np.arange(len(dsh_o))[starts], sizes)
-    e_rank = np.arange(len(dsh_o)) - e_first
-    edge_upd[dsh_o, e_rank] = edge_slot
-    edge_dst[dsh_o, e_rank] = dst_o - dsh_o * shard_size
+    e_first = np.zeros(len(dsh_g), dtype=np.int64)
+    if len(dsh_g):
+        starts = np.flatnonzero(np.r_[True, dsh_g[1:] != dsh_g[:-1]])
+        sizes = np.diff(np.r_[starts, len(dsh_g)])
+        e_first = np.repeat(np.arange(len(dsh_g))[starts], sizes)
+    e_rank = np.arange(len(dsh_g)) - e_first
+    edge_upd[dsh_g, e_rank] = slot_g
+    edge_dst[dsh_g, e_rank] = dst_g - dsh_g * shard_size
+
+    # --- per-shard blocked gather schedule over the dst-sorted streams
+    scheds = [flat_gather_schedule(edge_upd[s], edge_dst[s],
+                                   num_nodes=shard_size,
+                                   block=gather_block,
+                                   pad_update=zero_slot)
+              for s in range(num_shards)]
+    p_max = max(len(sc[1]) for sc in scheds)
+    mp = len(scheds[0][0])
+    eui_padded = np.stack([sc[0] for sc in scheds])
+    piece_start = np.zeros((num_shards, p_max), dtype=np.int32)
+    piece_end = np.zeros((num_shards, p_max), dtype=np.int32)
+    piece_dst = np.full((num_shards, p_max), shard_size, dtype=np.int32)
+    for s, (_, st, en, pd) in enumerate(scheds):
+        # pad pieces re-read run [0, 0] but carry the sentinel dst, so
+        # the segment-sum drops them — mathematically inert
+        piece_start[s, :len(st)] = st
+        piece_end[s, :len(en)] = en
+        piece_dst[s, :len(pd)] = pd
 
     wire_updates = int(np.sum(upd_ssh != upd_dsh))
     wire_edges = int(np.sum(s_sh != d_sh))
     return ShardedPNG(num_shards, shard_size, g.num_nodes,
                       send_ids, edge_upd, edge_dst,
-                      wire_updates, wire_edges)
+                      gather_block, eui_padded, piece_start, piece_end,
+                      piece_dst, wire_updates, wire_edges)
 
 
 # --------------------------------------------------------------- engines
-def pcpm_all_to_all_spmv(layout: ShardedPNG, mesh: Mesh, axis: str):
+def _scatter_all_to_all(x_l, send_l, axis, *, num_shards, shard_size,
+                        u_max):
+    """Shard-local scatter + wire phase: gather this shard's dedup send
+    buffers from local values and all-to-all them.  Returns the receive
+    buffer (S*U + 1, d) with a trailing zero slot for pad edges."""
+    ids = send_l[0]                                    # (S, U)
+    bufs = x_l[jnp.clip(ids, 0, shard_size - 1)] * (ids >= 0)[..., None]
+    recv = jax.lax.all_to_all(bufs, axis, 0, 0, tiled=True)
+    recv = recv.reshape(num_shards * u_max, x_l.shape[-1])
+    return jnp.concatenate(
+        [recv, jnp.zeros((1, recv.shape[-1]), recv.dtype)], 0)
+
+
+def pcpm_all_to_all_spmv(layout: ShardedPNG, mesh: Mesh, axis: str, *,
+                         blocked: bool = True):
     """Returns a jitted y = A^T x over vertex-sharded x (padded to
-    S * shard_size).  x: (n_pad,) or (n_pad, d)."""
+    S * shard_size).  x: (n_pad,) or (n_pad, d).
+
+    ``blocked=True`` (default) runs the shard-local gather as the
+    hierarchical blocked reduction over the dst-sorted stream
+    (DESIGN.md §3); ``blocked=False`` keeps the flat segment-sum as a
+    debug fallback.
+    """
     s, u = layout.num_shards, layout.send_ids.shape[2]
     ssz = layout.shard_size
+    blk = layout.gather_block
     send_ids = jnp.asarray(layout.send_ids)     # (S, S, U)
     edge_upd = jnp.asarray(layout.edge_upd)     # (S, E)
     edge_dst = jnp.asarray(layout.edge_dst)     # (S, E)
+    eui = jnp.asarray(layout.eui_padded)        # (S, Mp)
+    ps = jnp.asarray(layout.piece_start)        # (S, P0)
+    pe = jnp.asarray(layout.piece_end)          # (S, P0)
+    pd = jnp.asarray(layout.piece_dst)          # (S, P0)
     vec = P(axis)
     mat = P(axis, None)
 
-    def local(x_l, send_l, eu_l, ed_l):
-        # x_l (ssz, d); send_l (1, S, U); eu/ed (1, E)
+    def local(x_l, send_l, eu_l, ed_l, eui_l, ps_l, pe_l, pd_l):
         x_l = x_l.reshape(ssz, -1)
-        d = x_l.shape[-1]
-        ids = send_l[0]                                    # (S, U)
-        bufs = x_l[jnp.clip(ids, 0, ssz - 1)] * (ids >= 0)[..., None]
-        # scatter phase on the wire: compressed update bins
-        recv = jax.lax.all_to_all(bufs, axis, 0, 0, tiled=True)
-        recv = recv.reshape(s * u, d)
-        recv = jnp.concatenate([recv, jnp.zeros((1, d), recv.dtype)], 0)
-        # gather phase: local PCPM expand + accumulate
+        recv = _scatter_all_to_all(x_l, send_l, axis, num_shards=s,
+                                   shard_size=ssz, u_max=u)
+        if blocked:
+            return pcpm_gather_blocked(recv, eui_l[0], ps_l[0], pe_l[0],
+                                       pd_l[0], num_nodes=ssz, block=blk)
         vals = recv[eu_l[0]]                               # (E, d)
         y = jax.ops.segment_sum(vals, ed_l[0], num_segments=ssz + 1)
         return y[:ssz]
 
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(vec, mat, mat, mat),
+                   in_specs=(vec, P(axis, None, None), mat, mat, mat,
+                             mat, mat, mat),
                    out_specs=vec)
 
     @jax.jit
     def spmv(x):
         squeeze = x.ndim == 1
         xs = x[:, None] if squeeze else x
-        y = fn(xs, send_ids, edge_upd, edge_dst)
+        y = fn(xs, send_ids, edge_upd, edge_dst, eui, ps, pe, pd)
         return y[:, 0] if squeeze else y
 
     return spmv
@@ -193,7 +264,7 @@ def edge_cut_spmv(g: Graph, num_shards: int, mesh: Mesh, axis: str):
 
     send_src_j = jnp.asarray(send_src)
     send_dst_j = jnp.asarray(send_dst)
-    vec, mat = P(axis), P(axis, None)
+    vec, mat = P(axis), P(axis, None, None)
 
     def local(x_l, ss_l, sd_l):
         x_l = x_l.reshape(shard_size, -1)
@@ -229,26 +300,154 @@ def pad_to_shards(x: np.ndarray, layout: ShardedPNG) -> np.ndarray:
     return np.pad(x, width)
 
 
+# ----------------------------------------------- fused sharded iteration
+def sharded_power_iteration(layout: ShardedPNG, mesh: Mesh, axis: str,
+                            *, damping: float = 0.85,
+                            num_iterations: int = 20, tol: float = 0.0,
+                            check_every: int = 1, multi: bool = False,
+                            dangling: str = "none"):
+    """Device-resident sharded PageRank loop (DESIGN.md §6).
+
+    Returns a jitted ``run(pr0, inv_deg, base) -> (pr, it, residuals)``
+    over PADDED, vertex-sharded arrays (``n_pad = S * shard_size``):
+    ``pr0`` is donated, ``base`` is the already-(1-damping)-scaled
+    teleport vector (zero in pad slots).  The whole iteration is ONE
+    ``lax.while_loop`` under ``shard_map``:
+
+    - scatter + all-to-all + shard-local blocked gather per step;
+    - the L1 residual is psum-combined so the ``tol``/``check_every``
+      early exit is a replicated on-device decision — no host syncs;
+    - ``dangling="redistribute"`` psum-combines the rank mass parked on
+      zero-out-degree nodes each step and redistributes it over the
+      teleport distribution (``base / (1 - damping)``), conserving
+      total mass at 1;
+    - the pad-slot mask is a precomputed sharded constant (the seed
+      rebuilt a host-side ``arange(n_pad)`` every iteration).
+
+    With ``multi=True`` the state is (n_pad, d) — d independent rank
+    vectors in lockstep; the residual is the max over columns.
+    """
+    if dangling not in ("none", "redistribute"):
+        raise ValueError(f"unknown dangling policy {dangling!r}")
+    s, u = layout.num_shards, layout.send_ids.shape[2]
+    ssz = layout.shard_size
+    blk = layout.gather_block
+    n = layout.num_nodes
+    n_pad = layout.padded_nodes
+    send_ids = jnp.asarray(layout.send_ids)
+    eui = jnp.asarray(layout.eui_padded)
+    ps = jnp.asarray(layout.piece_start)
+    pe = jnp.asarray(layout.piece_end)
+    pd = jnp.asarray(layout.piece_dst)
+    mask_host = np.zeros(n_pad, dtype=np.float32)
+    mask_host[:n] = 1.0
+    mask = jnp.asarray(mask_host)
+    vec = P(axis)
+    state_spec = P(axis, None) if multi else P(axis)
+
+    def local_run(pr, inv_deg, base, mask_l, send_l, eui_l, ps_l, pe_l,
+                  pd_l):
+        # pr/base: (ssz,) or (ssz, d); inv_deg/mask_l: (ssz,)
+        inv_col = inv_deg[:, None] if multi else inv_deg
+        mask_col = mask_l[:, None] if multi else mask_l
+        # loop-invariant: dangling indicator and the redistribution
+        # direction (teleport distribution scaled by damping) — XLA
+        # hoists both out of the while body
+        dang = (inv_deg == 0).astype(pr.dtype) * mask_l
+        dang_col = dang[:, None] if multi else dang
+        redist = base * (damping / (1.0 - damping))
+        residuals0 = jnp.full((max(num_iterations, 1),), -1.0,
+                              dtype=jnp.float32)
+
+        def spmv(x2):
+            recv = _scatter_all_to_all(x2, send_l, axis, num_shards=s,
+                                       shard_size=ssz, u_max=u)
+            return pcpm_gather_blocked(recv, eui_l[0], ps_l[0], pe_l[0],
+                                       pd_l[0], num_nodes=ssz,
+                                       block=blk)
+
+        def cond(state):
+            it, _, _, done = state
+            return (it < num_iterations) & ~done
+
+        def body(state):
+            it, pr, residuals, done = state
+            spr = pr * inv_col                  # scaled ranks (alg.1 l.3)
+            y = spmv(spr if multi else spr[:, None])
+            y = y if multi else y[:, 0]
+            pr_next = base + damping * y
+            if dangling == "redistribute":
+                dmass = jax.lax.psum((pr * dang_col).sum(axis=0), axis)
+                pr_next = pr_next + dmass * redist
+            pr_next = pr_next * mask_col
+            check = (((it + 1) % check_every == 0)
+                     | (it + 1 >= num_iterations))
+            res_g = jax.lax.psum(jnp.abs(pr_next - pr).sum(axis=0),
+                                 axis)
+            res = jnp.where(check, res_g.max() if multi else res_g,
+                            -1.0)
+            residuals = residuals.at[it].set(res)
+            if tol > 0:
+                done = done | (check & (res >= 0) & (res < tol))
+            return it + 1, pr_next, residuals, done
+
+        it, pr, residuals, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), pr, residuals0, jnp.bool_(False)))
+        return pr, it, residuals
+
+    fn = shard_map(local_run, mesh=mesh,
+                   in_specs=(state_spec, vec, state_spec, vec,
+                             P(axis, None, None), P(axis, None),
+                             P(axis, None), P(axis, None),
+                             P(axis, None)),
+                   out_specs=(state_spec, P(), P()),
+                   check_rep=False)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def run(pr, inv_deg, base):
+        return fn(pr, inv_deg, base, mask, send_ids, eui, ps, pe, pd)
+
+    return run
+
+
+def _padded_inv_degree(g: Graph, layout: ShardedPNG) -> np.ndarray:
+    out_deg = np.asarray(g.out_degree)
+    inv = np.where(out_deg == 0, 0.0, 1.0 / np.maximum(out_deg, 1))
+    return pad_to_shards(inv.astype(np.float32), layout)
+
+
 def distributed_pagerank(g: Graph, mesh: Mesh, axis: str, *,
                          num_iterations: int = 20, damping: float = 0.85,
+                         tol: float = 0.0, check_every: int = 1,
+                         dangling: str = "none",
                          layout: ShardedPNG | None = None):
-    """PageRank over the sharded PCPM engine."""
-    num_shards = int(np.prod([s for n, s in
+    """PageRank over the sharded PCPM engine — one donated fused
+    ``lax.while_loop`` dispatch for the whole run (DESIGN.md §6).
+
+    Returns a ``PageRankResult`` (ranks sliced back to ``num_nodes``).
+    """
+    from .pagerank import PageRankResult   # local: avoids import cycle
+    num_shards = int(np.prod([sz for nme, sz in
                               zip(mesh.axis_names, mesh.devices.shape)
-                              if n == axis]))
+                              if nme == axis]))
     layout = layout or build_sharded_png(g, num_shards)
-    spmv = pcpm_all_to_all_spmv(layout, mesh, axis)
+    run = sharded_power_iteration(layout, mesh, axis, damping=damping,
+                                  num_iterations=num_iterations,
+                                  tol=tol, check_every=check_every,
+                                  dangling=dangling)
     n = g.num_nodes
-    n_pad = layout.num_shards * layout.shard_size
-    out_deg = np.asarray(g.out_degree)
-    inv_deg = np.where(out_deg == 0, 0.0, 1.0 / np.maximum(out_deg, 1))
-    inv_deg = jnp.asarray(pad_to_shards(inv_deg.astype(np.float32),
-                                        layout))
+    n_pad = layout.padded_nodes
     sharding = NamedSharding(mesh, P(axis))
-    pr = jax.device_put(jnp.full((n_pad,), 1.0 / n, jnp.float32), sharding)
-    pr = pr * (jnp.arange(n_pad) < n)
-    base = (1.0 - damping) / n
-    for _ in range(num_iterations):
-        pr = base + damping * spmv(pr * inv_deg)
-        pr = pr * (jnp.arange(n_pad) < n)
-    return np.asarray(pr)[:n]
+    pr0_host = np.zeros(n_pad, dtype=np.float32)
+    pr0_host[:n] = 1.0 / n
+    base_host = np.zeros(n_pad, dtype=np.float32)
+    base_host[:n] = (1.0 - damping) / n
+    pr0 = jax.device_put(jnp.asarray(pr0_host), sharding)
+    inv_deg = jax.device_put(jnp.asarray(_padded_inv_degree(g, layout)),
+                             sharding)
+    base = jax.device_put(jnp.asarray(base_host), sharding)
+    pr, it, res = run(pr0, inv_deg, base)
+    it = int(it)
+    res_host = np.asarray(res)[:it]
+    return PageRankResult(pr[:n], it,
+                          [float(r) for r in res_host if r >= 0.0])

@@ -49,7 +49,8 @@ def _inv_degree(g: Graph) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 def fused_power_iteration(engine: SpMVEngine, *, damping: float = 0.85,
                           num_iterations: int = 20, tol: float = 0.0,
-                          check_every: int = 1, multi: bool = False):
+                          check_every: int = 1, multi: bool = False,
+                          dangling: str = "none"):
     """Build (and cache on the engine) the jitted fused iteration loop.
 
     Returns a callable ``run(pr0, inv_deg, base) -> (pr, it, residuals)``
@@ -67,8 +68,18 @@ def fused_power_iteration(engine: SpMVEngine, *, damping: float = 0.85,
     The L1 residual is evaluated every ``check_every`` iterations (and
     on the last), so ``tol`` no longer costs a per-step reduction, let
     alone the Python driver's per-step host sync.
+
+    ``dangling="redistribute"`` adds sink handling: the rank mass
+    parked on zero-out-degree nodes is summed each step and
+    redistributed over the teleport distribution (``base`` rescaled by
+    ``damping / (1 - damping)``), so total mass is conserved at 1.  The
+    default ``"none"`` keeps the paper's implicit drop-the-mass
+    behaviour.
     """
-    key = ("fused", damping, num_iterations, tol, check_every, multi)
+    if dangling not in ("none", "redistribute"):
+        raise ValueError(f"unknown dangling policy {dangling!r}")
+    key = ("fused", damping, num_iterations, tol, check_every, multi,
+           dangling)
     cached = engine._fused_cache.get(key)
     if cached is not None:
         return cached
@@ -80,6 +91,9 @@ def fused_power_iteration(engine: SpMVEngine, *, damping: float = 0.85,
     def run(pr, inv_deg, base):
         if multi:
             inv_deg = inv_deg[:, None]
+        # loop-invariant sink terms — XLA hoists both out of the body
+        dang = (inv_deg == 0).astype(pr.dtype)
+        redist = base * (damping / (1.0 - damping))
         residuals0 = jnp.full((max(num_iterations, 1),), -1.0,
                               dtype=jnp.float32)
 
@@ -91,6 +105,9 @@ def fused_power_iteration(engine: SpMVEngine, *, damping: float = 0.85,
             it, pr, residuals, done = state
             spr = pr * inv_deg                  # scaled ranks (alg.1 l.3)
             pr_next = base + damping * spmv(spr)
+            if dangling == "redistribute":
+                dmass = (pr * dang).sum(axis=0)
+                pr_next = pr_next + dmass * redist
             check = (((it + 1) % check_every == 0)
                      | (it + 1 >= num_iterations))
             res = jnp.where(
@@ -110,12 +127,21 @@ def fused_power_iteration(engine: SpMVEngine, *, damping: float = 0.85,
 
 
 def _run_fused(g: Graph, eng: SpMVEngine, *, num_iterations: int,
-               damping: float, tol: float,
-               check_every: int) -> PageRankResult:
+               damping: float, tol: float, check_every: int,
+               dangling: str) -> PageRankResult:
+    if eng.method == "pcpm_sharded":
+        # the sharded engine owns its own fused loop (all-to-all +
+        # blocked gather + psum residual under shard_map)
+        from .distributed import distributed_pagerank
+        return distributed_pagerank(
+            g, eng.mesh, eng.shard_axis, num_iterations=num_iterations,
+            damping=damping, tol=tol, check_every=check_every,
+            dangling=dangling, layout=eng.sharded_layout)
     n = g.num_nodes
     run = fused_power_iteration(eng, damping=damping,
                                 num_iterations=num_iterations, tol=tol,
-                                check_every=check_every)
+                                check_every=check_every,
+                                dangling=dangling)
     pr0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     base = jnp.full((n,), (1.0 - damping) / n, dtype=jnp.float32)
     pr, it, res = run(pr0, _inv_degree(g), base)
@@ -128,9 +154,11 @@ def _run_fused(g: Graph, eng: SpMVEngine, *, num_iterations: int,
 # Python-loop driver (debug fallback; syncs on the host every iteration)
 # ---------------------------------------------------------------------------
 def _run_python(g: Graph, eng: SpMVEngine, *, num_iterations: int,
-                damping: float, tol: float) -> PageRankResult:
+                damping: float, tol: float,
+                dangling: str = "none") -> PageRankResult:
     n = g.num_nodes
     inv_deg = _inv_degree(g)
+    dang = (inv_deg == 0).astype(jnp.float32)
     pr = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     base = (1.0 - damping) / n
     residuals = []
@@ -138,6 +166,8 @@ def _run_python(g: Graph, eng: SpMVEngine, *, num_iterations: int,
     for it in range(1, num_iterations + 1):
         spr = pr * inv_deg
         pr_next = base + damping * eng(spr)   # A^T @ SPR
+        if dangling == "redistribute":
+            pr_next = pr_next + (pr * dang).sum() * (damping / n)
         res = float(jnp.abs(pr_next - pr).sum())
         residuals.append(res)
         pr = pr_next
@@ -149,27 +179,33 @@ def _run_python(g: Graph, eng: SpMVEngine, *, num_iterations: int,
 def pagerank(g: Graph, *, method: str = "pcpm", num_iterations: int = 20,
              damping: float = 0.85, part_size: int = 65536,
              tol: float = 0.0, engine: SpMVEngine | None = None,
-             driver: str = "fused", check_every: int = 1
-             ) -> PageRankResult:
+             driver: str = "fused", check_every: int = 1,
+             dangling: str = "none") -> PageRankResult:
     eng = engine or SpMVEngine(g, method=method, part_size=part_size)
     if driver == "python" or eng.two_phase:
         return _run_python(g, eng, num_iterations=num_iterations,
-                           damping=damping, tol=tol)
+                           damping=damping, tol=tol, dangling=dangling)
     if driver != "fused":
         raise ValueError(f"unknown driver {driver!r}")
     return _run_fused(g, eng, num_iterations=num_iterations,
-                      damping=damping, tol=tol, check_every=check_every)
+                      damping=damping, tol=tol, check_every=check_every,
+                      dangling=dangling)
 
 
 def pagerank_reference(g: Graph, *, num_iterations: int = 20,
-                       damping: float = 0.85) -> np.ndarray:
+                       damping: float = 0.85,
+                       dangling: str = "none") -> np.ndarray:
     """Dense numpy oracle for tests (small graphs only)."""
     n = g.num_nodes
     A = np.zeros((n, n), dtype=np.float64)
     np.add.at(A, (g.src, g.dst), 1.0)
     deg = np.maximum(g.out_degree, 1).astype(np.float64)
     inv = np.where(g.out_degree == 0, 0.0, 1.0 / deg)
+    sink = (np.asarray(g.out_degree) == 0).astype(np.float64)
     pr = np.full(n, 1.0 / n)
     for _ in range(num_iterations):
-        pr = (1 - damping) / n + damping * (A.T @ (pr * inv))
+        y = A.T @ (pr * inv)
+        if dangling == "redistribute":
+            y = y + (pr * sink).sum() / n
+        pr = (1 - damping) / n + damping * y
     return pr

@@ -145,6 +145,36 @@ class GatherSchedule:
         return len(self.edge_update_idx_padded) // self.block
 
 
+def flat_gather_schedule(edge_update_idx: np.ndarray,
+                         edge_dst: np.ndarray, *, num_nodes: int,
+                         block: int = 256, pad_update: int = 0
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]:
+    """Schedule-build core over raw dst-sorted streams.
+
+    Returns ``(eui_padded, piece_start, piece_end, piece_dst)`` with
+    the stream padded to a ``block`` multiple; pad edges point at
+    ``pad_update`` and carry the ``num_nodes`` sentinel destination so
+    the final segment-sum drops them.  Shared by the single-device PNG
+    schedule and the per-shard schedule of ``core/distributed.py``
+    (whose pad update is the receive buffer's zero slot).
+    """
+    m = len(edge_dst)
+    mp = -(-max(m, 1) // block) * block
+    dst_pad = np.full(mp, num_nodes, dtype=np.int32)
+    dst_pad[:m] = edge_dst
+    eui_pad = np.full(mp, pad_update, dtype=np.int32)
+    eui_pad[:m] = edge_update_idx
+
+    new_piece = np.empty(mp, dtype=bool)
+    new_piece[0] = True
+    np.not_equal(dst_pad[1:], dst_pad[:-1], out=new_piece[1:])
+    new_piece[::block] = True
+    starts = np.flatnonzero(new_piece).astype(np.int32)
+    ends = np.append(starts[1:], mp).astype(np.int32) - 1
+    return eui_pad, starts, ends, dst_pad[starts]
+
+
 def build_gather_schedule(layout: PNGLayout, *,
                           block: int = 256) -> GatherSchedule:
     """Cut the dst-sorted gather stream into per-block runs.
@@ -154,21 +184,11 @@ def build_gather_schedule(layout: PNGLayout, *,
     carry the ``num_nodes`` sentinel destination, so the final
     segment-sum drops them.
     """
-    m = layout.num_edges
-    mp = -(-max(m, 1) // block) * block
-    dst_pad = np.full(mp, layout.num_nodes, dtype=np.int32)
-    dst_pad[:m] = layout.edge_dst
-    eui_pad = np.zeros(mp, dtype=np.int32)
-    eui_pad[:m] = layout.edge_update_idx
-
-    new_piece = np.empty(mp, dtype=bool)
-    new_piece[0] = True
-    np.not_equal(dst_pad[1:], dst_pad[:-1], out=new_piece[1:])
-    new_piece[::block] = True
-    starts = np.flatnonzero(new_piece).astype(np.int32)
-    ends = np.append(starts[1:], mp).astype(np.int32) - 1
-    return GatherSchedule(block, m, eui_pad, starts, ends,
-                          dst_pad[starts])
+    eui_pad, starts, ends, piece_dst = flat_gather_schedule(
+        layout.edge_update_idx, layout.edge_dst,
+        num_nodes=layout.num_nodes, block=block, pad_update=0)
+    return GatherSchedule(block, layout.num_edges, eui_pad, starts,
+                          ends, piece_dst)
 
 
 # ---------------------------------------------------------------------------

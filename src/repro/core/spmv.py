@@ -206,13 +206,17 @@ def pcpm_spmv_weighted(png_update_src, png_edge_update_idx, png_edge_dst,
 class SpMVEngine:
     """y = A^T x with a fixed graph.
 
-    ``method`` in {pdpr, bvgas, pcpm, pcpm_pallas}: the three paper
-    engines plus the Pallas-kernel PCPM path (tiled one-hot gather v2,
-    interpret-mode fallback off-TPU — see kernels/pcpm_spmv).
+    ``method`` in {pdpr, bvgas, pcpm, pcpm_pallas, pcpm_sharded}: the
+    three paper engines, the Pallas-kernel PCPM path (tiled one-hot
+    gather v2, interpret-mode fallback off-TPU — see kernels/pcpm_spmv),
+    and the multi-device all-to-all PCPM path (core/distributed.py;
+    vertex-sharded over ``num_shards`` devices, default all of them).
     """
 
     def __init__(self, g: Graph, *, method: str = "pcpm",
-                 part_size: int = 65536, two_phase: bool = False):
+                 part_size: int = 65536, two_phase: bool = False,
+                 num_shards: int | None = None,
+                 shard_axis: str = "shards"):
         self.method = method
         self.num_nodes = g.num_nodes
         self.num_edges = g.num_edges
@@ -232,6 +236,22 @@ class SpMVEngine:
             self.layout = build_png(g, part)
             self._packed = pack_blocked(block_png(self.layout),
                                         g.num_nodes)
+        elif method == "pcpm_sharded":
+            from jax.sharding import Mesh
+            from .distributed import (build_sharded_png,
+                                      pcpm_all_to_all_spmv)
+            avail = jax.device_count()
+            num_shards = num_shards or avail
+            if num_shards > avail:
+                raise ValueError(
+                    f"num_shards={num_shards} exceeds the "
+                    f"{avail} available devices")
+            self.shard_axis = shard_axis
+            self.mesh = Mesh(
+                np.array(jax.devices()[:num_shards]), (shard_axis,))
+            self.sharded_layout = build_sharded_png(g, num_shards)
+            self._sharded_spmv = pcpm_all_to_all_spmv(
+                self.sharded_layout, self.mesh, shard_axis)
         else:
             raise ValueError(f"unknown method {method!r}")
 
@@ -239,6 +259,8 @@ class SpMVEngine:
     def compression_ratio(self) -> float:
         if self.method in ("pcpm", "pcpm_pallas"):
             return self.layout.compression_ratio
+        if self.method == "pcpm_sharded":
+            return self.sharded_layout.wire_compression
         return 1.0
 
     def spmv_fn(self):
@@ -257,6 +279,14 @@ class SpMVEngine:
             from ..kernels.pcpm_spmv import pcpm_spmv_pallas
             packed = self._packed
             return lambda x: pcpm_spmv_pallas(packed, x)
+        if self.method == "pcpm_sharded":
+            spmv, n = self._sharded_spmv, self.num_nodes
+            n_pad = self.sharded_layout.padded_nodes
+
+            def fn(x):
+                width = ((0, n_pad - n),) + ((0, 0),) * (x.ndim - 1)
+                return spmv(jnp.pad(x, width))[:n]
+            return fn
         png, n = self._png, self.num_nodes
         return lambda x: pcpm_gather_blocked(
             pcpm_scatter(png.update_src, x), png.eui_padded,
@@ -264,7 +294,7 @@ class SpMVEngine:
             num_nodes=n, block=png.gather_block)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        if self.method in ("pdpr", "pcpm_pallas"):
+        if self.method in ("pdpr", "pcpm_pallas", "pcpm_sharded"):
             return self.spmv_fn()(x)
         if self.method == "bvgas":
             bins = bvgas_scatter(self._bv.src, x)

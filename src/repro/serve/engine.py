@@ -49,33 +49,78 @@ class PageRankServer:
     .lower(...).compile()``).  ``query()`` only stages already-compiled
     device work; it never retraces (``trace_count`` stays fixed, see
     tests/test_fused_pagerank.py).
+
+    ``sharded=True`` serves from the multi-device engine instead: the
+    graph is vertex-sharded over ``num_shards`` devices (default all)
+    and the sharded fused loop — all-to-all scatter + blocked local
+    gather + psum residual under ``shard_map`` (DESIGN.md §6) — is AOT
+    compiled against the mesh, with explicitly sharded input avals so
+    requests dispatch straight onto device-local buffers.
     """
 
     def __init__(self, g: Graph, *, method: str = "pcpm_pallas",
                  part_size: int = 65536, batch: int = 1,
                  damping: float = 0.85, num_iterations: int = 20,
                  tol: float = 0.0, check_every: int = 1,
+                 dangling: str = "none", sharded: bool = False,
+                 num_shards: int | None = None,
                  engine: SpMVEngine | None = None):
         self.g = g
         self.n = g.num_nodes
         self.batch = batch
         self.damping = damping
+        if sharded and method not in ("pcpm_sharded",):
+            method = "pcpm_sharded"
+        if sharded and engine is not None \
+                and engine.method != "pcpm_sharded":
+            raise ValueError(
+                "sharded=True requires a pcpm_sharded engine; got "
+                f"method={engine.method!r}")
         self.engine = engine or SpMVEngine(g, method=method,
-                                           part_size=part_size)
+                                           part_size=part_size,
+                                           num_shards=num_shards)
+        self.sharded = self.engine.method == "pcpm_sharded"
         self.trace_count = 0
         multi = batch > 1
-        run = fused_power_iteration(
-            self.engine, damping=damping, num_iterations=num_iterations,
-            tol=tol, check_every=check_every, multi=multi)
+
+        if self.sharded:
+            from ..core.distributed import (_padded_inv_degree,
+                                            sharded_power_iteration)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            layout = self.engine.sharded_layout
+            mesh = self.engine.mesh
+            axis = self.engine.shard_axis
+            self._n_pad = layout.padded_nodes
+            run = sharded_power_iteration(
+                layout, mesh, axis, damping=damping,
+                num_iterations=num_iterations, tol=tol,
+                check_every=check_every, multi=multi, dangling=dangling)
+            self._vec_sharding = NamedSharding(mesh, P(axis))
+            self._state_sharding = (NamedSharding(mesh, P(axis, None))
+                                    if multi else self._vec_sharding)
+            self._inv_deg = jax.device_put(
+                jnp.asarray(_padded_inv_degree(g, layout)),
+                self._vec_sharding)
+            shape = ((self._n_pad, batch) if multi else (self._n_pad,))
+            spec = jax.ShapeDtypeStruct(shape, jnp.float32,
+                                        sharding=self._state_sharding)
+            inv_spec = jax.ShapeDtypeStruct((self._n_pad,), jnp.float32,
+                                            sharding=self._vec_sharding)
+        else:
+            run = fused_power_iteration(
+                self.engine, damping=damping,
+                num_iterations=num_iterations, tol=tol,
+                check_every=check_every, multi=multi, dangling=dangling)
+            self._n_pad = self.n
+            self._inv_deg = _inv_degree(g)
+            shape = (self.n, batch) if multi else (self.n,)
+            spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+            inv_spec = jax.ShapeDtypeStruct((self.n,), jnp.float32)
 
         def counted(pr, inv_deg, base):
             self.trace_count += 1           # increments only at trace time
             return run.__wrapped__(pr, inv_deg, base)
 
-        self._inv_deg = _inv_degree(g)
-        shape = (self.n, batch) if multi else (self.n,)
-        spec = jax.ShapeDtypeStruct(shape, jnp.float32)
-        inv_spec = jax.ShapeDtypeStruct((self.n,), jnp.float32)
         self._compiled = (jax.jit(counted, donate_argnums=(0,))
                           .lower(spec, inv_spec, spec).compile())
 
@@ -88,7 +133,7 @@ class PageRankServer:
         float per convergence check, in iteration order)."""
         shape = (self.n, self.batch) if self.batch > 1 else (self.n,)
         if seeds is None:
-            v = jnp.full(shape, 1.0 / self.n, dtype=jnp.float32)
+            host = np.full(shape, 1.0 / self.n, dtype=np.float32)
         else:
             host = np.asarray(seeds, dtype=np.float32).reshape(shape)
             sums = host.sum(axis=0)
@@ -96,9 +141,17 @@ class PageRankServer:
                 raise ValueError(
                     "every seed column must be finite with positive "
                     f"mass; got column sums {sums!r}")
-            v = jnp.asarray(host / sums)
+            host = host / sums
+        if self.sharded:
+            pad = self._n_pad - self.n
+            host = np.pad(host, ((0, pad),) + ((0, 0),) * (host.ndim - 1))
+            v = jax.device_put(jnp.asarray(host), self._state_sharding)
+        else:
+            v = jnp.asarray(host)
         pr, it, res = self._compiled(v, self._inv_deg,
                                      (1.0 - self.damping) * v)
+        if self.sharded:
+            pr = pr[:self.n]
         it = int(it)
         res_host = np.asarray(res)[:it]
         return pr, it, [float(r) for r in res_host if r >= 0.0]

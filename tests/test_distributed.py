@@ -19,8 +19,10 @@ SCRIPT = textwrap.dedent("""
     from repro.core.distributed import (build_sharded_png,
                                         pcpm_all_to_all_spmv,
                                         edge_cut_spmv, pad_to_shards,
-                                        distributed_pagerank)
-    from repro.core import pagerank_reference
+                                        distributed_pagerank,
+                                        sharded_power_iteration)
+    from repro.core import SpMVEngine, pagerank, pagerank_reference
+    from repro.serve import PageRankServer
 
     mesh = jax.make_mesh((8,), ("shards",))
     g = generators.rmat(9, 8, seed=11)
@@ -35,10 +37,14 @@ SCRIPT = textwrap.dedent("""
     x = rng.random(n).astype(np.float32)
     xp = jnp.asarray(pad_to_shards(x, layout))
 
-    # 1) PCPM distributed SpMV == dense oracle
+    # 1) PCPM distributed SpMV (blocked local gather) == dense oracle
     spmv = pcpm_all_to_all_spmv(layout, mesh, "shards")
     y = np.asarray(spmv(xp))[:n]
     np.testing.assert_allclose(y, A.T @ x, rtol=2e-4, atol=1e-5)
+    # the flat segment-sum fallback agrees with the blocked schedule
+    y_flat = np.asarray(pcpm_all_to_all_spmv(
+        layout, mesh, "shards", blocked=False)(xp))[:n]
+    np.testing.assert_allclose(y, y_flat, rtol=1e-4, atol=1e-6)
     print("pcpm spmv ok")
 
     # 2) multi-vector (GNN feature) SpMV
@@ -57,18 +63,106 @@ SCRIPT = textwrap.dedent("""
     assert layout.wire_updates <= layout.wire_edges
     print("wire", layout.wire_updates, "<=", layout.wire_edges)
 
-    # 5) distributed pagerank == dense oracle
-    pr = distributed_pagerank(g, mesh, "shards", num_iterations=15)
+    # 5) sharded fused pagerank == dense oracle, and matches the
+    #    single-device fused driver to 1e-6 Linf
+    res = distributed_pagerank(g, mesh, "shards", num_iterations=15,
+                               layout=layout)
     ref = pagerank_reference(g, num_iterations=15)
-    np.testing.assert_allclose(pr, ref, rtol=1e-3, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(res.ranks), ref, rtol=1e-3,
+                               atol=1e-7)
+    sd = pagerank(g, method="pcpm", num_iterations=15)
+    linf = float(np.abs(np.asarray(res.ranks)
+                        - np.asarray(sd.ranks)).max())
+    assert linf <= 1e-6, linf
     print("distributed pagerank ok")
 
-    # 6) HLO actually contains an all-to-all (not a gather fallback)
+    # 6) device-side early exit: sharded loop stops at the same
+    #    iteration as the single-device fused driver (psum residual
+    #    agreement)
+    res_t = distributed_pagerank(g, mesh, "shards", num_iterations=80,
+                                 tol=1e-6, layout=layout)
+    sd_t = pagerank(g, method="pcpm", num_iterations=80, tol=1e-6)
+    assert res_t.iterations == sd_t.iterations < 80, (
+        res_t.iterations, sd_t.iterations)
+    np.testing.assert_allclose(res_t.residuals, sd_t.residuals,
+                               rtol=5e-3, atol=1e-7)
+    print("early exit ok at", res_t.iterations)
+
+    # 7) dangling regression (the seed's distributed path dropped sink
+    #    mass and rebuilt the pad mask on host every iteration): a
+    #    graph with sinks keeps total mass 1 under redistribution and
+    #    matches the dense oracle
+    g_sink = generators.rmat(8, 4, seed=21)
+    assert (np.asarray(g_sink.out_degree) == 0).any(), "need sinks"
+    res_d = distributed_pagerank(g_sink, mesh, "shards",
+                                 num_iterations=25,
+                                 dangling="redistribute")
+    ref_d = pagerank_reference(g_sink, num_iterations=25,
+                               dangling="redistribute")
+    np.testing.assert_allclose(np.asarray(res_d.ranks), ref_d,
+                               rtol=1e-3, atol=1e-7)
+    mass = float(np.asarray(res_d.ranks).sum())
+    assert abs(mass - 1.0) < 1e-5, mass
+    # and it matches the single-device fused loop with the same policy
+    sd_d = pagerank(g_sink, method="pcpm", num_iterations=25,
+                    dangling="redistribute")
+    assert float(np.abs(np.asarray(res_d.ranks)
+                        - np.asarray(sd_d.ranks)).max()) <= 1e-6
+    print("dangling redistribution ok")
+
+    # 8) public API: SpMVEngine(method="pcpm_sharded") end-to-end
+    #    through pagerank()
+    eng = SpMVEngine(g, method="pcpm_sharded")
+    res_e = pagerank(g, engine=eng, num_iterations=15)
+    np.testing.assert_allclose(np.asarray(res_e.ranks), ref, rtol=1e-3,
+                               atol=1e-7)
+    # raw SpMV through the engine wrapper too
+    y_e = np.asarray(eng(jnp.asarray(x)))
+    np.testing.assert_allclose(y_e, A.T @ x, rtol=2e-4, atol=1e-5)
+    print("pcpm_sharded engine ok")
+
+    # 9) sharded serving: AOT-compiled on the mesh, zero retrace
+    srv = PageRankServer(g, sharded=True, num_iterations=10)
+    assert srv.trace_count == 1
+    for _ in range(3):
+        pr, it, _ = srv.query()
+        assert it == 10
+    assert srv.trace_count == 1
+    np.testing.assert_allclose(
+        np.asarray(pr), pagerank_reference(g, num_iterations=10),
+        rtol=1e-3, atol=1e-7)
+    print("sharded server ok")
+
+    # 10) HLO: the loop is one while with an all-to-all inside (not a
+    #     gather fallback), and spmv keeps its collective
+    run = sharded_power_iteration(layout, mesh, "shards",
+                                  num_iterations=5, tol=1e-6)
+    sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("shards"))
+    spec = jax.ShapeDtypeStruct((layout.padded_nodes,), jnp.float32,
+                                sharding=sh)
+    txt = run.lower(spec, spec, spec).compile().as_text()
+    assert "all-to-all" in txt, "expected all-to-all collective"
+    assert "while" in txt, "expected fused while loop"
     lowered = jax.jit(spmv).lower(
         jax.ShapeDtypeStruct(xp.shape, xp.dtype))
-    txt = lowered.compile().as_text()
-    assert "all-to-all" in txt, "expected all-to-all collective"
+    assert "all-to-all" in lowered.compile().as_text()
     print("collective check ok")
+
+    # 11) device residency: the sharded loop runs to completion without
+    #     a single device->host transfer
+    n_pad = layout.padded_nodes
+    pr0 = jax.device_put(jnp.full((n_pad,), 1.0 / n, jnp.float32)
+                         * (jnp.arange(n_pad) < n), sh)
+    base = jax.device_put(jnp.full((n_pad,), 0.15 / n, jnp.float32)
+                          * (jnp.arange(n_pad) < n), sh)
+    from repro.core.distributed import _padded_inv_degree
+    inv_deg = jax.device_put(
+        jnp.asarray(_padded_inv_degree(g, layout)), sh)
+    with jax.transfer_guard_device_to_host("disallow"):
+        pr, it, resid = run(pr0, inv_deg, base)
+        pr.block_until_ready()
+    print("no host transfers ok")
 """)
 
 
@@ -82,5 +176,7 @@ def test_distributed_pcpm(case, tmp_path):
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     for marker in ["pcpm spmv ok", "pcpm multivector ok",
                    "edge-cut spmv ok", "distributed pagerank ok",
-                   "collective check ok"]:
+                   "early exit ok", "dangling redistribution ok",
+                   "pcpm_sharded engine ok", "sharded server ok",
+                   "collective check ok", "no host transfers ok"]:
         assert marker in proc.stdout

@@ -45,3 +45,57 @@ def test_sharded_png_invariants(seed, scale, shards, use_rmat):
     # update source ids are valid local ids
     valid = lay.send_ids[lay.send_ids >= 0]
     assert (valid < lay.shard_size).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(5, 9),
+       st.sampled_from([2, 4, 8]), st.booleans())
+def test_sharded_gather_schedule_invariants(seed, scale, shards,
+                                            use_rmat):
+    """The per-shard blocked gather schedule (DESIGN.md §3 applied
+    shard-locally) must cover every real edge exactly once and keep all
+    pad slots mathematically inert."""
+    g = (rmat(scale, 4, seed=seed % 1000) if use_rmat
+         else uniform_random(1 << scale, (1 << scale) * 4,
+                             seed=seed % 1000))
+    lay = build_sharded_png(g, shards)
+    s, u = shards, lay.send_ids.shape[2]
+    ssz = lay.shard_size
+    mp = lay.eui_padded.shape[1]
+    zero_slot = s * u
+
+    # stream is padded to a whole number of blocks
+    assert mp % lay.gather_block == 0
+    # per-shard edge stream is sorted by local destination (the run
+    # structure the blocked reduction depends on)
+    for sh in range(s):
+        real = lay.edge_dst[sh][lay.edge_dst[sh] < ssz]
+        assert (np.diff(real) >= 0).all()
+
+    for sh in range(s):
+        st_, en, pd = (lay.piece_start[sh], lay.piece_end[sh],
+                       lay.piece_dst[sh])
+        real_p = pd < ssz
+        # real pieces tile the real-edge prefix: disjoint, in-bounds,
+        # and their sizes add up to the real edge count of the shard
+        assert (st_[real_p] <= en[real_p]).all()
+        assert (en[real_p] < mp).all()
+        sizes = (en[real_p] - st_[real_p] + 1)
+        n_real = int((lay.edge_dst[sh] < ssz).sum())
+        # real pieces tile the real edges exactly (pads have the
+        # sentinel dst, so they always start their own piece)
+        assert int(sizes.sum()) == n_real
+        # every real piece's covered slots carry real receive-buffer
+        # indices (strictly below the zero slot)
+        for a, b in zip(st_[real_p], en[real_p]):
+            sl = lay.eui_padded[sh, a:b + 1]
+            assert (sl < zero_slot).all()
+        # pad pieces are inert: sentinel destination
+        assert (pd[~real_p] == ssz).all()
+
+    # pad entries of the padded stream point at the zero slot
+    tail = lay.eui_padded[:, :]
+    pad_mask = np.ones((s, mp), dtype=bool)
+    e_max = lay.edge_dst.shape[1]
+    pad_mask[:, :e_max] = lay.edge_dst == ssz
+    assert (tail[pad_mask] == zero_slot).all()
