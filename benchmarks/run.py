@@ -24,11 +24,15 @@ def main(argv=None) -> int:
                     help="default: n/64 (paper-regime partition count)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
-                         "table7 dist e2e sharded")
+                         "table7 dist e2e sharded serve")
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="enable the sharded fused-loop comparison "
                          "with N shards (clamped to visible devices; "
                          "force host devices via XLA_FLAGS)")
+    ap.add_argument("--serve", action="store_true",
+                    help="add the continuous-batching serving load "
+                         "benchmark (queries/sec + p50/p99 latency "
+                         "alongside the per-iteration SpMV rows)")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="also write the rows as structured JSON "
                          "(perf-trajectory baseline, e.g. "
@@ -52,7 +56,7 @@ def main(argv=None) -> int:
     from . import (table4_runtime, fig8_comm, table5_locality,
                    table6_comm_locality, fig12_partition_sweep,
                    table7_preproc, dist_wire, pagerank_e2e,
-                   sharded_loop)
+                   sharded_loop, serve_load)
     jobs = {
         "table4": lambda: table4_runtime.run(
             datasets, part_size=args.part_size),
@@ -71,10 +75,15 @@ def main(argv=None) -> int:
         "sharded": lambda: sharded_loop.run(
             datasets[:2], num_shards=args.shards,
             part_size=args.part_size),
+        "serve": lambda: serve_load.run(
+            datasets[:2], part_size=args.part_size),
     }
-    selected = args.only or [j for j in jobs if j != "sharded"]
+    selected = args.only or [j for j in jobs
+                             if j not in ("sharded", "serve")]
     if args.shards and "sharded" not in selected:
         selected = selected + ["sharded"]
+    if args.serve and "serve" not in selected:
+        selected = selected + ["serve"]
     if "sharded" in selected and args.shards is None:
         args.shards = 8          # job default, recorded in the JSON doc
     out = Csv()

@@ -1,0 +1,172 @@
+"""Open-loop load generator for the continuous-batching PageRank
+query scheduler (serve/scheduler.py, DESIGN.md §7).
+
+Arrivals are pre-sampled from a Poisson process at ``rate_qps`` and
+replayed against the wall clock — open loop, so a slow server grows
+its queue and the reported latency honestly includes queueing.
+``rate_qps=None`` offers the whole workload at t=0 (saturation mode):
+the measured queries/sec is then the scheduler's capacity.
+
+The query mix mirrors a personalized-PageRank serving workload: mostly
+single-seed personalized queries (mixed tolerances -> mixed
+convergence times, the case continuous batching exists for), some
+uniform-teleport queries, some top-k-only queries.
+
+Reported per dataset:
+- ``serve/<ds>/iter``    — seconds per (n, B) multi-vector iteration of
+  the warm stepper with every slot active (the SpMV unit of work);
+- ``serve/<ds>/load``    — p50 latency as us_per_call, with qps / p99 /
+  mean iterations in the derived column.
+
+Standalone smoke mode (what CI runs and freezes as BENCH_serve.json):
+
+    PYTHONPATH=src python -m benchmarks.serve_load --smoke \
+        --json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.serve import ServeMetrics, SlotScheduler
+from repro.graphs import generators
+from .common import Csv, Dataset, suite
+
+
+def _mixed_workload(n: int, num_queries: int, *, seed: int):
+    """(seeds, top_k, tol) tuples: ~60% personalized, 20% uniform,
+    20% top-k, tolerances alternating between loose and tight."""
+    rng = np.random.default_rng(seed)
+    queries = []
+    for i in range(num_queries):
+        tol = (1e-3, 1e-5)[i % 2]
+        kind = i % 5
+        if kind < 3:
+            seeds = np.zeros(n, np.float32)
+            seeds[rng.integers(0, n, size=3)] = 1.0
+            queries.append((seeds, None, tol))
+        elif kind == 3:
+            queries.append((None, None, tol))
+        else:
+            queries.append((None, min(100, n), tol))
+    return queries
+
+
+def _measure_iter_time(ds: Dataset, *, slots: int, chunk: int,
+                       part_size: int, warm_iters: int = 32) -> float:
+    """Warm steady-state seconds per multi-vector iteration: every slot
+    active, fixed iteration budget, one timed drain."""
+    sch = SlotScheduler(ds.graph, slots=slots, method="pcpm",
+                        part_size=part_size, chunk=chunk)
+    for _ in range(slots):            # warm-up drain (first dispatches)
+        sch.submit(tol=0.0, max_iters=chunk)
+    sch.run_until_drained()
+    for _ in range(slots):
+        sch.submit(tol=0.0, max_iters=warm_iters)
+    t0 = time.perf_counter()
+    sch.run_until_drained()
+    return (time.perf_counter() - t0) / warm_iters
+
+
+def run(datasets: list[Dataset], *, slots: int = 4,
+        num_queries: int = 50, rate_qps: float | None = None,
+        chunk: int = 4, part_size: int = 65536, max_iters: int = 100,
+        seed: int = 0) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        iter_s = _measure_iter_time(ds, slots=slots, chunk=chunk,
+                                    part_size=part_size)
+        csv.add(f"serve/{ds.name}/iter", iter_s,
+                f"B={slots},chunk={chunk}")
+
+        sch = SlotScheduler(ds.graph, slots=slots, method="pcpm",
+                            part_size=part_size, chunk=chunk,
+                            metrics=ServeMetrics())
+        workload = _mixed_workload(ds.n, num_queries, seed=seed)
+        rng = np.random.default_rng(seed + 1)
+        if rate_qps is None:
+            arrivals = np.zeros(num_queries)
+        else:
+            arrivals = np.cumsum(rng.exponential(1.0 / rate_qps,
+                                                 num_queries))
+        t0 = time.perf_counter()
+        i = 0
+        while len(sch.completed) < num_queries:
+            now = time.perf_counter() - t0
+            while i < num_queries and arrivals[i] <= now:
+                seeds, top_k, tol = workload[i]
+                sch.submit(seeds, top_k=top_k, tol=tol,
+                           max_iters=max_iters)
+                i += 1
+            if sch.queued or sch.active_slots:
+                sch.step()
+            elif i < num_queries:
+                time.sleep(min(1e-3, arrivals[i] - now))
+        assert sch.trace_count == 1, "scheduler retraced under load"
+        s = sch.metrics.summary()
+        csv.add(f"serve/{ds.name}/load", s["p50_ms"] / 1e3,
+                f"qps={s['qps']:.1f},p99_ms={s['p99_ms']:.1f}"
+                f",mean_iters={s['mean_iterations']:.1f}"
+                f",n={s['count']}"
+                + (f",rate={rate_qps:g}" if rate_qps else ",saturation"))
+    return csv
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--num-queries", type=int, default=50)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="offered load in queries/sec "
+                         "(default: saturation)")
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one small RMAT graph, B=4")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.json:
+        open(args.json, "a").close()
+
+    t0 = time.time()
+    if args.smoke:
+        g = generators.rmat(10, 8, seed=1)
+        datasets = [Dataset("rmat_smoke", g)]
+        part_size = 64
+        args.slots = 4
+    else:
+        datasets = suite(args.scale)[:2]
+        from .common import default_part_size
+        part_size = default_part_size(1 << args.scale)
+    print("name,us_per_call,derived")
+    out = run(datasets, slots=args.slots, num_queries=args.num_queries,
+              rate_qps=args.rate, chunk=args.chunk,
+              part_size=part_size)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s, {len(out.rows)} rows", flush=True)
+    if args.json:
+        doc = {
+            "smoke": args.smoke,
+            "slots": args.slots,
+            "num_queries": args.num_queries,
+            "rate_qps": args.rate,
+            "chunk": args.chunk,
+            "total_seconds": round(total_s, 1),
+            "datasets": [{"name": d.name, "n": d.n, "m": d.m}
+                         for d in datasets],
+            "rows": [{"name": n, "us_per_call": round(us, 1),
+                      "derived": derived}
+                     for n, us, derived in out.rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {args.json}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

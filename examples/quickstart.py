@@ -1,12 +1,18 @@
 """Quickstart: Partition-Centric PageRank in ~40 lines.
 
-    PYTHONPATH=src python examples/quickstart.py [--scale 16]
+    PYTHONPATH=src python examples/quickstart.py [--scale 16] [--serve]
 
 Builds a Graph500-style Kronecker graph, constructs the PNG layout
 (compress + transpose, paper §IV-B), runs 20 PageRank iterations with
 all three engines (PDPR / BVGAS / PCPM), checks they agree, and prints
 the paper's headline statistics: compression ratio r, modeled bytes per
 edge (eqs. 3-5), and measured per-iteration time.
+
+``--serve`` continues into the serving layer: a continuous-batching
+SlotScheduler (DESIGN.md §7) answers a handful of mixed queries —
+personalized seeds, per-request tolerances, on-device top-k — from one
+AOT-compiled (n, B) stepper.  The full multi-graph demo is
+examples/serve_pagerank.py.
 """
 import argparse
 import time
@@ -26,6 +32,10 @@ def main():
     ap.add_argument("--scale", type=int, default=15)
     ap.add_argument("--edge-factor", type=int, default=16)
     ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--serve", action="store_true",
+                    help="also demo the continuous-batching query "
+                         "scheduler (examples/serve_pagerank.py has "
+                         "the full version)")
     args = ap.parse_args()
 
     g = generators.rmat(args.scale, args.edge_factor, seed=7)
@@ -64,6 +74,24 @@ def main():
     print(f"modeled bytes/edge  pdpr(worst)={pdpr_bytes(pm)/g.num_edges:.1f}"
           f"  bvgas={bvgas_bytes(pm)/g.num_edges:.1f}"
           f"  pcpm={pcpm_bytes(pm)/g.num_edges:.1f}")
+
+    if args.serve:
+        from repro.serve import SlotScheduler
+        sch = SlotScheduler(g, slots=4, method="pcpm",
+                            part_size=part_size, chunk=4)
+        sch.submit(tol=0.0, max_iters=args.iters)          # uniform
+        seeds = np.zeros(g.num_nodes, np.float32)
+        seeds[0] = 1.0
+        sch.submit(seeds, tol=1e-5, max_iters=100)         # personalized
+        sch.submit(top_k=10, tol=1e-4, max_iters=100)      # top-k only
+        for r in sch.run_until_drained():
+            what = (f"top10 ids {r.top_ids[:4]}..."
+                    if r.top_ids is not None else "full ranks")
+            print(f"serve: uid={r.uid} it={r.iterations} "
+                  f"conv={r.converged} {what}")
+        s = sch.metrics.summary()
+        print(f"serve: {s['qps']:.1f} qps, p50={s['p50_ms']:.1f}ms "
+              f"(see examples/serve_pagerank.py)")
 
 
 if __name__ == "__main__":

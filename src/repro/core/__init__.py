@@ -7,7 +7,7 @@ from .spmv import (SpMVEngine, pdpr_spmv, pcpm_spmv, pcpm_scatter,
                    bvgas_gather, pcpm_spmv_weighted, DevicePNG,
                    DeviceCSC, DeviceBVGAS)
 from .pagerank import (pagerank, pagerank_reference, PageRankResult,
-                       fused_power_iteration)
+                       fused_power_iteration, masked_chunk_stepper)
 from . import comm_model
 
 __all__ = [
@@ -18,5 +18,5 @@ __all__ = [
     "pcpm_gather", "pcpm_gather_blocked", "bvgas_scatter",
     "bvgas_gather", "pcpm_spmv_weighted", "DevicePNG", "DeviceCSC",
     "DeviceBVGAS", "pagerank", "pagerank_reference", "PageRankResult",
-    "fused_power_iteration", "comm_model",
+    "fused_power_iteration", "masked_chunk_stepper", "comm_model",
 ]

@@ -153,7 +153,6 @@ def build_sharded_png(g: Graph, num_shards: int, *,
                                    pad_update=zero_slot)
               for s in range(num_shards)]
     p_max = max(len(sc[1]) for sc in scheds)
-    mp = len(scheds[0][0])
     eui_padded = np.stack([sc[0] for sc in scheds])
     piece_start = np.zeros((num_shards, p_max), dtype=np.int32)
     piece_end = np.zeros((num_shards, p_max), dtype=np.int32)
@@ -301,6 +300,34 @@ def pad_to_shards(x: np.ndarray, layout: ShardedPNG) -> np.ndarray:
 
 
 # ----------------------------------------------- fused sharded iteration
+def _shard_streams(layout: ShardedPNG):
+    """Device copies of the static layout streams plus the pad-row
+    mask — the per-shard constants every shard_map'd iteration loop
+    (fused batch loop and serving chunk stepper alike) closes over."""
+    mask_host = np.zeros(layout.padded_nodes, dtype=np.float32)
+    mask_host[:layout.num_nodes] = 1.0
+    return (jnp.asarray(layout.send_ids), jnp.asarray(layout.eui_padded),
+            jnp.asarray(layout.piece_start),
+            jnp.asarray(layout.piece_end),
+            jnp.asarray(layout.piece_dst), jnp.asarray(mask_host))
+
+
+def _local_gather_spmv(layout: ShardedPNG, axis: str, send_l, eui_l,
+                       ps_l, pe_l, pd_l):
+    """The shard-local y = A^T x closure (scatter + all-to-all +
+    blocked gather) over the shard_map-sliced stream arguments."""
+    s, u = layout.num_shards, layout.send_ids.shape[2]
+    ssz, blk = layout.shard_size, layout.gather_block
+
+    def spmv(x2):
+        recv = _scatter_all_to_all(x2, send_l, axis, num_shards=s,
+                                   shard_size=ssz, u_max=u)
+        return pcpm_gather_blocked(recv, eui_l[0], ps_l[0], pe_l[0],
+                                   pd_l[0], num_nodes=ssz, block=blk)
+
+    return spmv
+
+
 def sharded_power_iteration(layout: ShardedPNG, mesh: Mesh, axis: str,
                             *, damping: float = 0.85,
                             num_iterations: int = 20, tol: float = 0.0,
@@ -329,19 +356,7 @@ def sharded_power_iteration(layout: ShardedPNG, mesh: Mesh, axis: str,
     """
     if dangling not in ("none", "redistribute"):
         raise ValueError(f"unknown dangling policy {dangling!r}")
-    s, u = layout.num_shards, layout.send_ids.shape[2]
-    ssz = layout.shard_size
-    blk = layout.gather_block
-    n = layout.num_nodes
-    n_pad = layout.padded_nodes
-    send_ids = jnp.asarray(layout.send_ids)
-    eui = jnp.asarray(layout.eui_padded)
-    ps = jnp.asarray(layout.piece_start)
-    pe = jnp.asarray(layout.piece_end)
-    pd = jnp.asarray(layout.piece_dst)
-    mask_host = np.zeros(n_pad, dtype=np.float32)
-    mask_host[:n] = 1.0
-    mask = jnp.asarray(mask_host)
+    send_ids, eui, ps, pe, pd, mask = _shard_streams(layout)
     vec = P(axis)
     state_spec = P(axis, None) if multi else P(axis)
 
@@ -358,13 +373,8 @@ def sharded_power_iteration(layout: ShardedPNG, mesh: Mesh, axis: str,
         redist = base * (damping / (1.0 - damping))
         residuals0 = jnp.full((max(num_iterations, 1),), -1.0,
                               dtype=jnp.float32)
-
-        def spmv(x2):
-            recv = _scatter_all_to_all(x2, send_l, axis, num_shards=s,
-                                       shard_size=ssz, u_max=u)
-            return pcpm_gather_blocked(recv, eui_l[0], ps_l[0], pe_l[0],
-                                       pd_l[0], num_nodes=ssz,
-                                       block=blk)
+        spmv = _local_gather_spmv(layout, axis, send_l, eui_l, ps_l,
+                                  pe_l, pd_l)
 
         def cond(state):
             it, _, _, done = state
@@ -408,6 +418,80 @@ def sharded_power_iteration(layout: ShardedPNG, mesh: Mesh, axis: str,
         return fn(pr, inv_deg, base, mask, send_ids, eui, ps, pe, pd)
 
     return run
+
+
+def sharded_chunk_stepper(layout: ShardedPNG, mesh: Mesh, axis: str, *,
+                          damping: float = 0.85, chunk: int = 8,
+                          dangling: str = "none"):
+    """Sharded analogue of ``core.pagerank.masked_chunk_stepper``
+    (DESIGN.md §7): advances a vertex-sharded (n_pad, B) slot pool by up
+    to ``chunk`` iterations in ONE donated dispatch — scatter +
+    all-to-all + blocked gather per step, per-column L1 residuals
+    psum-combined so each column's freeze decision is replicated on
+    device.  Per-column ``tol_col``/``budget`` are replicated data, so
+    per-request parameters never retrace; frozen columns are masked out
+    of the damping update exactly as in the single-device stepper.
+
+    Returns ``step(pr, base, active, tol_col, budget, inv_deg) ->
+    (pr, active, took, res)`` over PADDED sharded ``pr/base/inv_deg``
+    and replicated (B,) control arrays.
+    """
+    if dangling not in ("none", "redistribute"):
+        raise ValueError(f"unknown dangling policy {dangling!r}")
+    send_ids, eui, ps, pe, pd, mask = _shard_streams(layout)
+    vec = P(axis)
+    state_spec = P(axis, None)
+    rep = P()
+
+    def local_step(pr, base, active, tol_col, budget, inv_deg, mask_l,
+                   send_l, eui_l, ps_l, pe_l, pd_l):
+        # pr/base: (shard_size, B); active/tol_col/budget: (B,) replicated
+        inv_col = inv_deg[:, None]
+        mask_col = mask_l[:, None]
+        dang_col = ((inv_deg == 0).astype(pr.dtype) * mask_l)[:, None]
+        redist = base * (damping / (1.0 - damping))
+        took0 = jnp.zeros(pr.shape[1], dtype=jnp.int32)
+        res0 = jnp.full((pr.shape[1],), -1.0, dtype=jnp.float32)
+        spmv = _local_gather_spmv(layout, axis, send_l, eui_l, ps_l,
+                                  pe_l, pd_l)
+
+        def cond(state):
+            i, _, act, _, _ = state
+            return (i < chunk) & act.any()
+
+        def body(state):
+            i, pr, act, took, res = state
+            spr = pr * inv_col
+            pr_next = base + damping * spmv(spr)
+            if dangling == "redistribute":
+                dmass = jax.lax.psum((pr * dang_col).sum(axis=0), axis)
+                pr_next = pr_next + dmass[None, :] * redist
+            pr_next = pr_next * mask_col
+            r = jax.lax.psum(jnp.abs(pr_next - pr).sum(axis=0), axis)
+            pr = jnp.where(act[None, :], pr_next, pr)
+            res = jnp.where(act, r, res)
+            took = took + act.astype(jnp.int32)
+            act = act & (r >= tol_col) & (took < budget)
+            return i + 1, pr, act, took, res
+
+        _, pr, active, took, res = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), pr, active, took0, res0))
+        return pr, active, took, res
+
+    fn = shard_map(local_step, mesh=mesh,
+                   in_specs=(state_spec, state_spec, rep, rep, rep,
+                             vec, vec, P(axis, None, None),
+                             P(axis, None), P(axis, None),
+                             P(axis, None), P(axis, None)),
+                   out_specs=(state_spec, rep, rep, rep),
+                   check_rep=False)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def step(pr, base, active, tol_col, budget, inv_deg):
+        return fn(pr, base, active, tol_col, budget, inv_deg, mask,
+                  send_ids, eui, ps, pe, pd)
+
+    return step
 
 
 def _padded_inv_degree(g: Graph, layout: ShardedPNG) -> np.ndarray:

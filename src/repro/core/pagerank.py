@@ -126,6 +126,80 @@ def fused_power_iteration(engine: SpMVEngine, *, damping: float = 0.85,
     return run
 
 
+def masked_chunk_stepper(engine: SpMVEngine, *, damping: float = 0.85,
+                         chunk: int = 8, dangling: str = "none"):
+    """Chunked variant of the fused loop for continuous-batching query
+    serving (DESIGN.md §7): the state is a (n, B) slot pool of
+    independent rank vectors, each column carrying its OWN convergence
+    state, and one call advances every still-active column by up to
+    ``chunk`` iterations as a single donated device dispatch.
+
+    Returns ``step(pr, base, active, tol_col, budget, inv_deg) ->
+    (pr, active, took, res)``:
+
+    - ``pr/base`` (n, B): rank state and per-column (1-damping)-scaled
+      teleport vectors; ``pr`` is donated.
+    - ``active`` (B,) bool: columns still iterating.  Converged (or
+      empty) columns are FROZEN — masked out of the damping update so
+      their ranks stay bit-identical while neighbours keep iterating.
+    - ``tol_col`` (B,) f32 / ``budget`` (B,) i32: per-column tolerance
+      and remaining-iteration allowance.  Both are DATA, not trace
+      constants, so per-request tol/max_iters never retrace.
+    - outputs: updated ``pr``; ``active`` with newly converged or
+      budget-exhausted columns cleared; ``took`` (B,) i32 iterations
+      actually executed per column this chunk; ``res`` (B,) f32 last
+      L1 residual per column (-1 for columns that never ran).
+
+    The chunk loop is a ``lax.while_loop`` that exits as soon as every
+    column froze, so a nearly-drained pool doesn't pay ``chunk`` full
+    SpMV passes.  The SpMV itself always runs on the full (n, B) state
+    (static shapes — the TPU constraint); frozen columns simply have
+    their update discarded, which is exactly what makes one multi-
+    vector pass the cheap unit of work the scheduler batches over.
+    """
+    if dangling not in ("none", "redistribute"):
+        raise ValueError(f"unknown dangling policy {dangling!r}")
+    key = ("chunk", damping, chunk, dangling)
+    cached = engine._fused_cache.get(key)
+    if cached is not None:
+        return cached
+
+    spmv = engine.spmv_fn()
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def step(pr, base, active, tol_col, budget, inv_deg):
+        inv_col = inv_deg[:, None]
+        dang_col = (inv_col == 0).astype(pr.dtype)
+        redist = base * (damping / (1.0 - damping))
+        took0 = jnp.zeros(pr.shape[1], dtype=jnp.int32)
+        res0 = jnp.full((pr.shape[1],), -1.0, dtype=jnp.float32)
+
+        def cond(state):
+            i, _, act, _, _ = state
+            return (i < chunk) & act.any()
+
+        def body(state):
+            i, pr, act, took, res = state
+            spr = pr * inv_col                  # scaled ranks (alg.1 l.3)
+            pr_next = base + damping * spmv(spr)
+            if dangling == "redistribute":
+                dmass = (pr * dang_col).sum(axis=0)       # (B,)
+                pr_next = pr_next + dmass[None, :] * redist
+            r = jnp.abs(pr_next - pr).sum(axis=0)         # (B,) per slot
+            pr = jnp.where(act[None, :], pr_next, pr)     # freeze others
+            res = jnp.where(act, r, res)
+            took = took + act.astype(jnp.int32)
+            act = act & (r >= tol_col) & (took < budget)
+            return i + 1, pr, act, took, res
+
+        _, pr, active, took, res = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), pr, active, took0, res0))
+        return pr, active, took, res
+
+    engine._fused_cache[key] = step
+    return step
+
+
 def _run_fused(g: Graph, eng: SpMVEngine, *, num_iterations: int,
                damping: float, tol: float, check_every: int,
                dangling: str) -> PageRankResult:

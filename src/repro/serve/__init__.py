@@ -1,3 +1,11 @@
 from .engine import PageRankServer, ServeEngine, Request
+from .scheduler import (SlotScheduler, GraphRegistry, Query,
+                        QueryResult)
+from .metrics import ServeMetrics, QueryTrace
+from .topk import make_slot_topk, topk_ranks
 
-__all__ = ["PageRankServer", "ServeEngine", "Request"]
+__all__ = [
+    "PageRankServer", "ServeEngine", "Request",
+    "SlotScheduler", "GraphRegistry", "Query", "QueryResult",
+    "ServeMetrics", "QueryTrace", "make_slot_topk", "topk_ranks",
+]

@@ -35,6 +35,36 @@ from ..models import transformer as tf
 # ---------------------------------------------------------------------------
 # PageRank serving
 # ---------------------------------------------------------------------------
+def _mesh_shardings(engine: SpMVEngine):
+    """(vector, matrix, replicated) NamedShardings on a pcpm_sharded
+    engine's mesh — shared by both PageRank serving front-ends
+    (``PageRankServer`` and ``serve.scheduler.SlotScheduler``)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh, axis = engine.mesh, engine.shard_axis
+    return (NamedSharding(mesh, P(axis)),
+            NamedSharding(mesh, P(axis, None)),
+            NamedSharding(mesh, P()))
+
+
+def _sharded_inv_degree(g: Graph, engine: SpMVEngine, vec_sharding):
+    """Padded inverse out-degree, uploaded vertex-sharded."""
+    from ..core.distributed import _padded_inv_degree
+    return jax.device_put(
+        jnp.asarray(_padded_inv_degree(g, engine.sharded_layout)),
+        vec_sharding)
+
+
+def _normalize_teleport(host: np.ndarray) -> np.ndarray:
+    """Validate and column-normalize teleport distributions (a single
+    (n,) vector or (n, batch) columns)."""
+    sums = host.sum(axis=0)
+    if not (np.isfinite(sums).all() and np.all(sums > 0)):
+        raise ValueError(
+            "every seed column must be finite with positive mass; "
+            f"got column sums {sums!r}")
+    return host / sums
+
+
 class PageRankServer:
     """Serve (personalized) PageRank queries from a pre-compiled fused
     iteration loop.
@@ -81,26 +111,23 @@ class PageRankServer:
                                            num_shards=num_shards)
         self.sharded = self.engine.method == "pcpm_sharded"
         self.trace_count = 0
+        self._uniform_cache = None
         multi = batch > 1
 
         if self.sharded:
-            from ..core.distributed import (_padded_inv_degree,
-                                            sharded_power_iteration)
-            from jax.sharding import NamedSharding, PartitionSpec as P
+            from ..core.distributed import sharded_power_iteration
             layout = self.engine.sharded_layout
-            mesh = self.engine.mesh
-            axis = self.engine.shard_axis
             self._n_pad = layout.padded_nodes
             run = sharded_power_iteration(
-                layout, mesh, axis, damping=damping,
-                num_iterations=num_iterations, tol=tol,
+                layout, self.engine.mesh, self.engine.shard_axis,
+                damping=damping, num_iterations=num_iterations, tol=tol,
                 check_every=check_every, multi=multi, dangling=dangling)
-            self._vec_sharding = NamedSharding(mesh, P(axis))
-            self._state_sharding = (NamedSharding(mesh, P(axis, None))
-                                    if multi else self._vec_sharding)
-            self._inv_deg = jax.device_put(
-                jnp.asarray(_padded_inv_degree(g, layout)),
-                self._vec_sharding)
+            self._vec_sharding, mat_sharding, _ = _mesh_shardings(
+                self.engine)
+            self._state_sharding = (mat_sharding if multi
+                                    else self._vec_sharding)
+            self._inv_deg = _sharded_inv_degree(g, self.engine,
+                                                self._vec_sharding)
             shape = ((self._n_pad, batch) if multi else (self._n_pad,))
             spec = jax.ShapeDtypeStruct(shape, jnp.float32,
                                         sharding=self._state_sharding)
@@ -124,6 +151,28 @@ class PageRankServer:
         self._compiled = (jax.jit(counted, donate_argnums=(0,))
                           .lower(spec, inv_spec, spec).compile())
 
+    def _upload(self, host: np.ndarray):
+        if self.sharded:
+            return jax.device_put(jnp.asarray(host),
+                                  self._state_sharding)
+        return jnp.asarray(host)
+
+    def _uniform_batch(self):
+        """The uniform-teleport batch, built once: the padded host
+        array (the iteration state is donated, so it re-uploads per
+        query, but is never re-materialized with ``np.full``) and the
+        REUSABLE base device buffer (base is not donated)."""
+        if self._uniform_cache is None:
+            shape = (self.n, self.batch) if self.batch > 1 else (self.n,)
+            host = np.full(shape, 1.0 / self.n, dtype=np.float32)
+            if self.sharded:
+                pad = self._n_pad - self.n
+                host = np.pad(host,
+                              ((0, pad),) + ((0, 0),) * (host.ndim - 1))
+            base = self._upload((1.0 - self.damping) * host)
+            self._uniform_cache = (host, base)
+        return self._uniform_cache
+
     def query(self, seeds: np.ndarray | None = None):
         """Rank one batch.  ``seeds``: (n, batch) per-query teleport
         distributions (columns need not be normalized — they are), or
@@ -133,23 +182,18 @@ class PageRankServer:
         float per convergence check, in iteration order)."""
         shape = (self.n, self.batch) if self.batch > 1 else (self.n,)
         if seeds is None:
-            host = np.full(shape, 1.0 / self.n, dtype=np.float32)
+            host, base = self._uniform_batch()
+            v = self._upload(host)
         else:
-            host = np.asarray(seeds, dtype=np.float32).reshape(shape)
-            sums = host.sum(axis=0)
-            if not (np.isfinite(sums).all() and (sums > 0).all()):
-                raise ValueError(
-                    "every seed column must be finite with positive "
-                    f"mass; got column sums {sums!r}")
-            host = host / sums
-        if self.sharded:
-            pad = self._n_pad - self.n
-            host = np.pad(host, ((0, pad),) + ((0, 0),) * (host.ndim - 1))
-            v = jax.device_put(jnp.asarray(host), self._state_sharding)
-        else:
-            v = jnp.asarray(host)
-        pr, it, res = self._compiled(v, self._inv_deg,
-                                     (1.0 - self.damping) * v)
+            host = _normalize_teleport(
+                np.asarray(seeds, dtype=np.float32).reshape(shape))
+            if self.sharded:
+                pad = self._n_pad - self.n
+                host = np.pad(host,
+                              ((0, pad),) + ((0, 0),) * (host.ndim - 1))
+            v = self._upload(host)
+            base = (1.0 - self.damping) * v
+        pr, it, res = self._compiled(v, self._inv_deg, base)
         if self.sharded:
             pr = pr[:self.n]
         it = int(it)
@@ -164,6 +208,7 @@ class Request:
     max_new_tokens: int = 16
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
 
 
 class ServeEngine:
@@ -185,7 +230,18 @@ class ServeEngine:
                 params, cfg, cache, tok, t))
 
     # ---------------------------------------------------------- admission
+    def fits(self, req: Request) -> bool:
+        """Whether the request can EVER be admitted: prompt plus token
+        budget must stay inside the static per-slot cache region (the
+        last KV write for a full generation lands at position
+        ``len(prompt) + max_new_tokens - 2``; anything longer would be
+        truncated or, for prompts past ``max_len``, corrupt the
+        slot)."""
+        return len(req.prompt) + req.max_new_tokens <= self.max_len
+
     def add_request(self, req: Request) -> bool:
+        if not self.fits(req):
+            return False
         for i in range(self.b):
             if self.slot_req[i] is None:
                 self.slot_req[i] = req
@@ -235,10 +291,22 @@ class ServeEngine:
 
     def run_until_drained(self, requests: list[Request],
                           max_steps: int = 10_000) -> list[Request]:
-        queue = list(requests)
+        queue = []
+        for req in requests:
+            # never-fitting requests are rejected up front instead of
+            # blocking the head of the line forever
+            if self.fits(req):
+                queue.append(req)
+            else:
+                req.error = (f"prompt ({len(req.prompt)}) + "
+                             f"max_new_tokens ({req.max_new_tokens})"
+                             f" exceed max_len={self.max_len}")
+                req.done = True
         for _ in range(max_steps):
-            while queue and self.add_request(queue[0]):
-                queue.pop(0)
+            # every queued request fits, so admission only waits on a
+            # free slot — no per-step queue rescans once the pool fills
+            while queue and self.active < self.b:
+                self.add_request(queue.pop(0))
             if not queue and self.active == 0:
                 break
             if self.active:

@@ -1,0 +1,96 @@
+"""Latency / throughput recorder for the PageRank query scheduler.
+
+One ``QueryTrace`` per query: submit -> admit (queue wait) -> done
+(service).  ``summary()`` reduces the traces to the open-loop serving
+headline numbers — p50/p99 end-to-end latency and queries/sec over the
+span between the first submit and the last completion — which is what
+``benchmarks/serve_load.py`` reports and CI freezes as
+``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class QueryTrace:
+    uid: int
+    t_submit: float
+    t_admit: float | None = None
+    t_done: float | None = None
+    iterations: int = 0
+    converged: bool = False
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_wait_s(self) -> float | None:
+        if self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1,
+              max(0, round(q / 100.0 * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+class ServeMetrics:
+    """Per-query trace collection with an aggregate summary.
+
+    The clock is injectable so tests can drive deterministic times.
+    """
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.traces: dict[int, QueryTrace] = {}
+
+    def submitted(self, uid: int) -> None:
+        self.traces[uid] = QueryTrace(uid, self._clock())
+
+    def admitted(self, uid: int) -> None:
+        self.traces[uid].t_admit = self._clock()
+
+    def completed(self, uid: int, *, iterations: int,
+                  converged: bool) -> None:
+        tr = self.traces[uid]
+        tr.t_done = self._clock()
+        tr.iterations = iterations
+        tr.converged = converged
+
+    @property
+    def completed_count(self) -> int:
+        return sum(tr.t_done is not None for tr in self.traces.values())
+
+    def summary(self) -> dict:
+        done = [tr for tr in self.traces.values() if tr.t_done is not None]
+        if not done:
+            return {"count": 0, "qps": 0.0, "p50_ms": 0.0, "p99_ms": 0.0,
+                    "mean_ms": 0.0, "queue_p50_ms": 0.0,
+                    "mean_iterations": 0.0, "converged_frac": 0.0}
+        lats = sorted(tr.latency_s for tr in done)
+        waits = sorted(tr.queue_wait_s for tr in done
+                       if tr.t_admit is not None)
+        span = (max(tr.t_done for tr in done)
+                - min(tr.t_submit for tr in done))
+        return {
+            "count": len(done),
+            "qps": len(done) / span if span > 0 else float("inf"),
+            "p50_ms": _percentile(lats, 50) * 1e3,
+            "p99_ms": _percentile(lats, 99) * 1e3,
+            "mean_ms": sum(lats) / len(lats) * 1e3,
+            "queue_p50_ms": _percentile(waits, 50) * 1e3,
+            "mean_iterations": (sum(tr.iterations for tr in done)
+                                / len(done)),
+            "converged_frac": (sum(tr.converged for tr in done)
+                               / len(done)),
+        }

@@ -1,0 +1,395 @@
+"""Continuous-batching PageRank query scheduler (DESIGN.md §7).
+
+``PageRankServer`` (serve/engine.py) iterates a batch in LOCKSTEP: the
+whole (n, B) state runs a fixed shared loop and every query pays for
+the slowest column.  Real personalized-PageRank query traffic is the
+opposite regime — many independent seed vectors with wildly different
+convergence times — so this module turns the slot pool into a
+continuous batch, the PCPM property that one multi-vector SpMV pass is
+the cheap unit of work doing the heavy lifting:
+
+    queue -> slot -> (chunk steps, per-slot freeze) -> converged -> freed
+
+- ``SlotScheduler`` owns a fixed pool of B seed-vector slots sharing
+  ONE (n, B) masked chunk stepper (``core.pagerank.masked_chunk_stepper``
+  or its sharded twin).  Each slot carries its own residual and
+  convergence mask ON DEVICE: converged columns are frozen (masked out
+  of the damping update) while neighbours keep iterating.
+- The host side drains finished slots between chunks and admits queued
+  requests into freed columns WITHOUT RETRACING: the stepper, the
+  column-admit write and the full-column extract are AOT compiled once
+  at construction (donated buffers; ``trace_count`` stays fixed) —
+  slot index, per-request tol and iteration budget are all data.
+- Top-k queries ship (k,) ids+scores from device (serve/topk.py)
+  instead of the full n-vector.
+- ``GraphRegistry`` holds compiled schedulers for several graphs
+  (warm-loaded via graphs/io.py) so one server process serves many
+  graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.pagerank import _inv_degree, masked_chunk_stepper
+from ..core.spmv import SpMVEngine
+from ..graphs.formats import Graph
+from ..graphs import io as graph_io
+from .engine import (_mesh_shardings, _normalize_teleport,
+                     _sharded_inv_degree)
+from .metrics import ServeMetrics
+from .topk import make_slot_topk
+
+# process-global: uids stay unique even when several schedulers (e.g.
+# a GraphRegistry's) share one ServeMetrics, whose traces key on uid
+_uid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Query:
+    """One PageRank request.  ``seed`` is the normalized (and, when
+    sharded, padded) teleport distribution — None means uniform."""
+    uid: int
+    seed: Optional[np.ndarray] = None
+    top_k: Optional[int] = None
+    tol: float = 1e-6
+    max_iters: int = 100
+
+
+@dataclasses.dataclass
+class QueryResult:
+    uid: int
+    iterations: int
+    converged: bool
+    residual: float
+    latency_s: float
+    ranks: Optional[np.ndarray] = None        # (n,) unless top_k set
+    top_ids: Optional[np.ndarray] = None      # (k,) int32
+    top_scores: Optional[np.ndarray] = None   # (k,) float32
+
+
+class SlotScheduler:
+    """Request queue + B-slot continuous batch over one AOT stepper.
+
+    Construction does all tracing/compilation (stepper, admit,
+    extract); serving afterwards is pure data movement — the
+    acceptance invariant is ``trace_count == 1`` forever after.
+    """
+
+    def __init__(self, g: Graph, *, slots: int = 4,
+                 method: str = "pcpm", part_size: int = 65536,
+                 damping: float = 0.85, chunk: int = 8,
+                 dangling: str = "none", sharded: bool = False,
+                 num_shards: int | None = None,
+                 engine: SpMVEngine | None = None,
+                 metrics: ServeMetrics | None = None):
+        if slots < 1:
+            raise ValueError(f"need at least one slot; got {slots}")
+        self.g = g
+        self.n = g.num_nodes
+        self.slots = slots
+        self.damping = damping
+        self.chunk = chunk
+        if sharded and method != "pcpm_sharded":
+            method = "pcpm_sharded"
+        if engine is not None and sharded \
+                and engine.method != "pcpm_sharded":
+            raise ValueError(
+                "sharded=True requires a pcpm_sharded engine; got "
+                f"method={engine.method!r}")
+        self.engine = engine or SpMVEngine(g, method=method,
+                                           part_size=part_size,
+                                           num_shards=num_shards)
+        self.sharded = self.engine.method == "pcpm_sharded"
+        self.metrics = metrics or ServeMetrics()
+        self.trace_count = 0          # stepper traces — must stay 1
+        self.admit_trace_count = 0    # column-admit traces — must stay 1
+
+        B = slots
+        if self.sharded:
+            from ..core.distributed import sharded_chunk_stepper
+            layout = self.engine.sharded_layout
+            self._n_pad = layout.padded_nodes
+            step = sharded_chunk_stepper(layout, self.engine.mesh,
+                                         self.engine.shard_axis,
+                                         damping=damping, chunk=chunk,
+                                         dangling=dangling)
+            (self._vec_sharding, self._state_sharding,
+             self._rep_sharding) = _mesh_shardings(self.engine)
+            self._inv_deg = _sharded_inv_degree(g, self.engine,
+                                                self._vec_sharding)
+            state_spec = jax.ShapeDtypeStruct(
+                (self._n_pad, B), jnp.float32,
+                sharding=self._state_sharding)
+            seed_spec = jax.ShapeDtypeStruct(
+                (self._n_pad,), jnp.float32, sharding=self._vec_sharding)
+            inv_spec = seed_spec
+            rep = self._rep_sharding
+            act_spec = jax.ShapeDtypeStruct((B,), jnp.bool_, sharding=rep)
+            tol_spec = jax.ShapeDtypeStruct((B,), jnp.float32,
+                                            sharding=rep)
+            bud_spec = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=rep)
+            col_spec = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+            zeros = jax.device_put(
+                jnp.zeros((self._n_pad, B), jnp.float32),
+                self._state_sharding)
+        else:
+            step = masked_chunk_stepper(self.engine, damping=damping,
+                                        chunk=chunk, dangling=dangling)
+            self._n_pad = self.n
+            self._vec_sharding = self._state_sharding = None
+            self._inv_deg = _inv_degree(g)
+            state_spec = jax.ShapeDtypeStruct((self.n, B), jnp.float32)
+            seed_spec = jax.ShapeDtypeStruct((self.n,), jnp.float32)
+            inv_spec = seed_spec
+            act_spec = jax.ShapeDtypeStruct((B,), jnp.bool_)
+            tol_spec = jax.ShapeDtypeStruct((B,), jnp.float32)
+            bud_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+            col_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            zeros = jnp.zeros((self.n, B), jnp.float32)
+
+        def counted_step(pr, base, active, tol_col, budget, inv_deg):
+            self.trace_count += 1     # increments only at trace time
+            return step.__wrapped__(pr, base, active, tol_col, budget,
+                                    inv_deg)
+
+        self._step_c = (jax.jit(counted_step, donate_argnums=(0,))
+                        .lower(state_spec, state_spec, act_spec,
+                               tol_spec, bud_spec, inv_spec).compile())
+
+        dmp = damping
+
+        def counted_admit(pr, base, seed, col):
+            self.admit_trace_count += 1
+            pr = jax.lax.dynamic_update_slice(pr, seed[:, None], (0, col))
+            base = jax.lax.dynamic_update_slice(
+                base, ((1.0 - dmp) * seed)[:, None], (0, col))
+            return pr, base
+
+        self._admit_c = (jax.jit(counted_admit, donate_argnums=(0, 1))
+                         .lower(state_spec, state_spec, seed_spec,
+                                col_spec).compile())
+
+        self._extract_c = (jax.jit(lambda pr, col: pr[:, col])
+                           .lower(state_spec, col_spec).compile())
+        self._topk_fn = make_slot_topk(self.n)
+        self._topk_cache: dict[int, object] = {}
+        self._state_spec = state_spec
+        self._col_spec = col_spec
+
+        # device slot-pool state (pr donated through step/admit; base
+        # donated through admit)
+        self._pr = zeros
+        self._base = (jax.device_put(jnp.zeros_like(zeros),
+                                     self._state_sharding)
+                      if self.sharded else jnp.zeros_like(zeros))
+        # cached uniform teleport seed — admit never donates the seed
+        # argument, so one device buffer serves every seeds=None query
+        uni = np.zeros(self._n_pad, dtype=np.float32)
+        uni[:self.n] = 1.0 / self.n
+        self._uniform_seed = (jax.device_put(jnp.asarray(uni),
+                                             self._vec_sharding)
+                              if self.sharded else jnp.asarray(uni))
+
+        # host-side slot + queue state
+        self._slot_query: list[Optional[Query]] = [None] * B
+        self._active = np.zeros(B, dtype=bool)
+        self._iters = np.zeros(B, dtype=np.int64)
+        self._tol = np.zeros(B, dtype=np.float32)
+        self._max_iters = np.zeros(B, dtype=np.int64)
+        self._queue: list[Query] = []
+        self.completed: list[QueryResult] = []
+
+    # ------------------------------------------------------------ intake
+    def submit(self, seeds: np.ndarray | None = None, *,
+               top_k: int | None = None, tol: float = 1e-6,
+               max_iters: int = 100) -> int:
+        """Enqueue one query; returns its uid.  ``seeds`` is an (n,)
+        teleport distribution (need not be normalized — it is), or None
+        for uniform teleport.  ``tol=0`` runs exactly ``max_iters``
+        iterations."""
+        if max_iters < 0:
+            raise ValueError(f"max_iters must be >= 0; got {max_iters}")
+        if top_k is not None and not 1 <= top_k <= self.n:
+            raise ValueError(f"top_k must be in [1, {self.n}]; "
+                             f"got {top_k}")
+        seed = None
+        if seeds is not None:
+            seed = _normalize_teleport(
+                np.asarray(seeds, dtype=np.float32).reshape(self.n))
+            if self._n_pad != self.n:
+                seed = np.pad(seed, (0, self._n_pad - self.n))
+        uid = next(_uid_counter)
+        self._queue.append(Query(uid, seed, top_k, float(tol),
+                                 int(max_iters)))
+        self.metrics.submitted(uid)
+        return uid
+
+    @property
+    def active_slots(self) -> int:
+        return sum(q is not None for q in self._slot_query)
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    # --------------------------------------------------------- admission
+    def _put_small(self, arr):
+        """Small (B,)/scalar control arrays: replicate on the mesh when
+        sharded so they match the compiled executable's avals."""
+        x = jnp.asarray(arr)
+        return (jax.device_put(x, self._rep_sharding) if self.sharded
+                else x)
+
+    def _admit(self, slot: int, q: Query) -> None:
+        seed_dev = (self._uniform_seed if q.seed is None
+                    else (jax.device_put(jnp.asarray(q.seed),
+                                         self._vec_sharding)
+                          if self.sharded else jnp.asarray(q.seed)))
+        self._pr, self._base = self._admit_c(
+            self._pr, self._base, seed_dev,
+            self._put_small(np.int32(slot)))
+        self._slot_query[slot] = q
+        self._active[slot] = q.max_iters > 0
+        self._iters[slot] = 0
+        self._tol[slot] = q.tol
+        self._max_iters[slot] = q.max_iters
+        self.metrics.admitted(q.uid)
+        if q.max_iters == 0:          # degenerate: serve the seed as-is
+            self._finish(slot, q, residual=-1.0)
+
+    def _admit_from_queue(self) -> int:
+        admitted = 0
+        for slot in range(self.slots):
+            if not self._queue:
+                break
+            if self._slot_query[slot] is None:
+                self._admit(slot, self._queue.pop(0))
+                admitted += 1
+        return admitted
+
+    # ------------------------------------------------------------- serve
+    def step(self) -> int:
+        """Admit from the queue, advance every active slot by up to
+        ``chunk`` masked iterations (ONE stepper dispatch), drain slots
+        that froze.  Returns the number of queries completed (including
+        any finished at admission, e.g. ``max_iters=0``)."""
+        before = len(self.completed)
+        self._admit_from_queue()
+        if not self._active.any():
+            return len(self.completed) - before
+        budget = np.minimum(self._max_iters - self._iters,
+                            np.iinfo(np.int32).max).astype(np.int32)
+        self._pr, active, took, res = self._step_c(
+            self._pr, self._base, self._put_small(self._active),
+            self._put_small(self._tol),
+            self._put_small(np.maximum(budget, 0)), self._inv_deg)
+        active = np.asarray(active)
+        self._iters += np.asarray(took)
+        res = np.asarray(res)
+        for slot in range(self.slots):
+            q = self._slot_query[slot]
+            if q is None or active[slot]:
+                continue
+            if not self._active[slot]:
+                continue              # was already idle before the call
+            self._finish(slot, q, residual=float(res[slot]))
+        self._active = active & np.array(
+            [q is not None for q in self._slot_query])
+        return len(self.completed) - before
+
+    def _finish(self, slot: int, q: Query, *, residual: float) -> None:
+        it = int(self._iters[slot])
+        converged = 0.0 <= residual < q.tol
+        self.metrics.completed(q.uid, iterations=it, converged=converged)
+        col = self._put_small(np.int32(slot))
+        if q.top_k is not None:
+            topk_c = self._topk_cache.get(q.top_k)
+            if topk_c is None:
+                topk_c = (self._topk_fn
+                          .lower(self._state_spec, self._col_spec,
+                                 k=q.top_k).compile())
+                self._topk_cache[q.top_k] = topk_c
+            ids, scores = topk_c(self._pr, col)
+            result = QueryResult(
+                q.uid, it, converged, residual,
+                self.metrics.traces[q.uid].latency_s,
+                top_ids=np.asarray(ids), top_scores=np.asarray(scores))
+        else:
+            ranks = np.asarray(self._extract_c(self._pr, col))[:self.n]
+            result = QueryResult(
+                q.uid, it, converged, residual,
+                self.metrics.traces[q.uid].latency_s, ranks=ranks)
+        self.completed.append(result)
+        self._slot_query[slot] = None
+        self._active[slot] = False
+
+    def run_until_drained(self, *, max_chunks: int = 100_000
+                          ) -> list[QueryResult]:
+        """Serve until the queue and every slot are empty.  Returns the
+        results completed during this call, in completion order."""
+        start = len(self.completed)
+        for _ in range(max_chunks):
+            if not self._queue and self.active_slots == 0:
+                break
+            self.step()
+        else:
+            raise RuntimeError(
+                f"not drained after {max_chunks} chunks "
+                f"({self.queued} queued, {self.active_slots} active)")
+        return self.completed[start:]
+
+
+class GraphRegistry:
+    """Named collection of compiled ``SlotScheduler``s — one server
+    process serving several graphs, each behind its own warm stepper.
+
+    Keyword defaults passed at construction apply to every graph;
+    per-graph overrides win.  ``load`` warm-loads a persisted graph
+    (graphs/io.py npz) and compiles its scheduler immediately, so the
+    first query pays zero trace/compile cost.
+    """
+
+    def __init__(self, **defaults):
+        self._defaults = defaults
+        self._schedulers: dict[str, SlotScheduler] = {}
+
+    def add(self, name: str, g: Graph, **overrides) -> SlotScheduler:
+        if name in self._schedulers:
+            raise ValueError(f"graph {name!r} already registered")
+        kw = {**self._defaults, **overrides}
+        self._schedulers[name] = SlotScheduler(g, **kw)
+        return self._schedulers[name]
+
+    def load(self, name: str, path: str, **overrides) -> SlotScheduler:
+        return self.add(name, graph_io.load(path), **overrides)
+
+    def get(self, name: str) -> SlotScheduler:
+        try:
+            return self._schedulers[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown graph {name!r}; registered: "
+                f"{sorted(self._schedulers)}") from None
+
+    def submit(self, name: str, seeds: np.ndarray | None = None,
+               **kw) -> int:
+        return self.get(name).submit(seeds, **kw)
+
+    def run_until_drained(self) -> dict[str, list[QueryResult]]:
+        return {name: sch.run_until_drained()
+                for name, sch in self._schedulers.items()}
+
+    def names(self) -> list[str]:
+        return sorted(self._schedulers)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._schedulers
+
+    def __len__(self) -> int:
+        return len(self._schedulers)

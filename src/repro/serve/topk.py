@@ -1,0 +1,45 @@
+"""On-device top-k rank extraction (DESIGN.md §7).
+
+A "top 100 of graph X" query should ship 100 ids + 100 scores over
+PCIe/ICI, not the full n-vector.  ``slot_topk`` slices one column out
+of the (n, B) slot pool (column index is DATA — no retrace across
+slots) and runs ``jax.lax.top_k`` on device; only the (k,) results
+cross to the host.  Pad rows of a sharded pool are masked to -1 so
+they can never outrank a real vertex (true ranks are >= 0).
+
+``k`` is necessarily a static shape parameter, so the scheduler keeps
+one compiled extractor per distinct k (see ``SlotScheduler``); queries
+reusing a k hit the cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def make_slot_topk(num_nodes: int):
+    """Build ``topk(pr, col, k) -> (ids, scores)`` for an (n_pad, B)
+    slot pool whose first ``num_nodes`` rows are real vertices."""
+
+    @partial(jax.jit, static_argnames=("k",))
+    def topk(pr, col, k):
+        column = pr[:, col]                       # traced col: one gather
+        if column.shape[0] != num_nodes:          # mask sharding pad rows
+            column = jnp.where(jnp.arange(column.shape[0]) < num_nodes,
+                               column, -1.0)
+        scores, ids = jax.lax.top_k(column, k)
+        return ids.astype(jnp.int32), scores
+
+    return topk
+
+
+slot_topk = make_slot_topk
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_ranks(pr, k):
+    """Standalone top-k over a single (n,) rank vector."""
+    scores, ids = jax.lax.top_k(pr, k)
+    return ids.astype(jnp.int32), scores

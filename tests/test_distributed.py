@@ -163,6 +163,35 @@ SCRIPT = textwrap.dedent("""
         pr, it, resid = run(pr0, inv_deg, base)
         pr.block_until_ready()
     print("no host transfers ok")
+
+    # 12) continuous-batching scheduler on the 8-shard mesh: mixed
+    #     per-slot convergence, zero retraces, parity with the
+    #     single-device scheduler and the dense oracle
+    from repro.serve import SlotScheduler
+    sch = SlotScheduler(g, slots=4, sharded=True, chunk=4)
+    assert sch.sharded and sch.engine.mesh.devices.size == 8
+    uid_u = sch.submit(tol=0.0, max_iters=15)
+    seeds = np.zeros(n, np.float32); seeds[3] = 1.0
+    uid_p = sch.submit(seeds, tol=1e-6, max_iters=200)
+    uid_f = sch.submit(seeds, tol=1e-3, max_iters=200)
+    uid_k = sch.submit(tol=0.0, max_iters=15, top_k=25)
+    by = {r.uid: r for r in sch.run_until_drained()}
+    assert sch.trace_count == 1 and sch.admit_trace_count == 1
+    ref15 = pagerank_reference(g, num_iterations=15)
+    assert np.abs(by[uid_u].ranks - ref15).max() <= 1e-5
+    assert by[uid_f].iterations < by[uid_p].iterations  # early exit
+    np.testing.assert_allclose(by[uid_k].top_scores,
+                               np.sort(ref15)[-25:][::-1], atol=1e-5)
+    assert (by[uid_k].top_ids < n).all()     # pad rows masked out
+    # parity with the single-device scheduler at identical budgets
+    sd = SlotScheduler(g, slots=4, method="pcpm", chunk=4)
+    sd_u = sd.submit(tol=0.0, max_iters=15)
+    sd_p = sd.submit(seeds, tol=1e-6, max_iters=200)
+    sd_by = {r.uid: r for r in sd.run_until_drained()}
+    assert by[uid_p].iterations == sd_by[sd_p].iterations
+    assert np.abs(by[uid_u].ranks - sd_by[sd_u].ranks).max() <= 1e-6
+    assert np.abs(by[uid_p].ranks - sd_by[sd_p].ranks).max() <= 1e-6
+    print("sharded scheduler ok")
 """)
 
 
@@ -178,5 +207,6 @@ def test_distributed_pcpm(case, tmp_path):
                    "edge-cut spmv ok", "distributed pagerank ok",
                    "early exit ok", "dangling redistribution ok",
                    "pcpm_sharded engine ok", "sharded server ok",
-                   "collective check ok", "no host transfers ok"]:
+                   "collective check ok", "no host transfers ok",
+                   "sharded scheduler ok"]:
         assert marker in proc.stdout

@@ -1,0 +1,390 @@
+"""Continuous-batching PageRank serving subsystem (ISSUE 3):
+
+- acceptance workload: 50 mixed-convergence requests on a B=4 slot
+  pool, zero retraces (trace_count == 1), served ranks vs
+  pagerank_reference / the dense personalized oracle to <= 1e-5 Linf;
+- per-slot early exit: a slow slot iterates past a fast slot's
+  convergence, and the fast slot's frozen ranks stay pinned to the
+  oracle at exactly its own iteration count;
+- slot reuse after convergence; no-retrace across mixed seeds=None /
+  ndarray / top-k queries;
+- on-device top-k agrees with the full-vector ranks to <= 1e-6 and
+  ships only (k,) ids+scores;
+- GraphRegistry: several compiled graphs in one process, warm-loaded
+  from graphs/io.py;
+- PageRankServer uniform-batch caching (satellite);
+- ServeEngine head-of-line regression (satellite): a never-fitting
+  request must not starve the queue behind it.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import generators, io as graph_io
+from repro.core import pagerank_reference
+from repro.serve import (GraphRegistry, PageRankServer, ServeMetrics,
+                         SlotScheduler)
+
+
+def personalized_oracle(g, seed, iterations, damping=0.85):
+    """Dense personalized-PageRank oracle for a single seed vector."""
+    n = g.num_nodes
+    A = np.zeros((n, n))
+    np.add.at(A, (g.src, g.dst), 1.0)
+    inv = np.where(g.out_degree == 0, 0.0,
+                   1.0 / np.maximum(g.out_degree, 1))
+    v = np.asarray(seed, dtype=np.float64)
+    v = v / v.sum()
+    x = v.copy()
+    for _ in range(iterations):
+        x = (1 - damping) * v + damping * (A.T @ (x * inv))
+    return x
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.rmat(7, 8, seed=9)
+
+
+# ----------------------------------------------------- acceptance workload
+class TestContinuousBatching:
+    def test_50_request_mixed_workload_zero_retrace(self, graph):
+        """The headline: 50 requests with wildly different convergence
+        times share a B=4 pool; everything is served correctly with a
+        single stepper trace."""
+        g = graph
+        n = g.num_nodes
+        rng = np.random.default_rng(3)
+        sch = SlotScheduler(g, slots=4, method="pcpm", part_size=32,
+                            chunk=4)
+        assert sch.trace_count == 1          # traced once, at lowering
+        assert sch.admit_trace_count == 1
+
+        expected = {}
+        for i in range(50):
+            kind = i % 4
+            if kind == 0:                    # uniform, fixed iterations
+                uid = sch.submit(tol=0.0, max_iters=20)
+                expected[uid] = ("uniform", None, 20)
+            elif kind == 1:                  # personalized, loose tol
+                seeds = np.zeros(n, np.float32)
+                seeds[rng.integers(0, n)] = 1.0
+                uid = sch.submit(seeds, tol=1e-3, max_iters=200)
+                expected[uid] = ("seeded", seeds, None)
+            elif kind == 2:                  # personalized, tight tol
+                seeds = np.zeros(n, np.float32)
+                seeds[rng.integers(0, n, size=4)] = 1.0
+                uid = sch.submit(seeds, tol=1e-6, max_iters=200)
+                expected[uid] = ("seeded", seeds, None)
+            else:                            # uniform top-k
+                uid = sch.submit(top_k=10, tol=0.0, max_iters=20)
+                expected[uid] = ("topk", None, 20)
+
+        results = sch.run_until_drained()
+        assert len(results) == 50
+        assert sch.trace_count == 1          # ZERO retraces under load
+        assert sch.admit_trace_count == 1
+
+        iters_seen = set()
+        ref20 = pagerank_reference(g, num_iterations=20)
+        for r in results:
+            kind, seeds, fixed_iters = expected[r.uid]
+            if kind == "uniform":
+                assert r.iterations == 20
+                assert np.abs(r.ranks - ref20).max() <= 1e-5
+            elif kind == "seeded":
+                assert r.converged
+                oracle = personalized_oracle(g, seeds, r.iterations)
+                assert np.abs(r.ranks - oracle).max() <= 1e-5
+                iters_seen.add(r.iterations)
+            else:
+                assert r.top_ids.shape == (10,)
+                assert r.top_scores.shape == (10,)
+                top = np.sort(ref20)[-10:][::-1]
+                np.testing.assert_allclose(r.top_scores, top, atol=1e-5)
+        # genuinely mixed convergence: tolerances produced different
+        # per-slot iteration counts inside shared pools
+        assert len(iters_seen) > 1
+
+    def test_per_slot_early_exit(self, graph):
+        """A fast (loose-tol) slot freezes while its slow neighbour
+        keeps iterating in the same pool — and the frozen column is
+        bit-stable at the oracle for exactly its own iteration count."""
+        g = graph
+        sch = SlotScheduler(g, slots=2, method="pcpm", part_size=32,
+                            chunk=4)
+        fast = sch.submit(tol=1e-3, max_iters=200)
+        slow = sch.submit(tol=1e-6, max_iters=200)
+        results = sch.run_until_drained()
+        by = {r.uid: r for r in results}
+        assert by[fast].converged and by[slow].converged
+        # the slow slot iterated past the fast slot's convergence
+        assert by[fast].iterations < by[slow].iterations
+        assert results[0].uid == fast        # and completed first
+        for uid in (fast, slow):
+            ref = pagerank_reference(
+                g, num_iterations=by[uid].iterations)
+            assert np.abs(by[uid].ranks - ref).max() <= 1e-5
+        assert sch.trace_count == 1
+
+    def test_slot_reuse_after_convergence(self, graph):
+        """More queries than slots: freed columns are re-admitted (no
+        retrace) and every query is served."""
+        sch = SlotScheduler(graph, slots=2, method="pcpm",
+                            part_size=32, chunk=4)
+        uids = [sch.submit(tol=0.0, max_iters=5 + 3 * i)
+                for i in range(7)]
+        results = sch.run_until_drained()
+        assert sorted(r.uid for r in results) == sorted(uids)
+        assert sch.trace_count == 1
+        assert sch.admit_trace_count == 1
+        ref = {it: pagerank_reference(graph, num_iterations=it)
+               for it in {5 + 3 * i for i in range(7)}}
+        for r, it in zip(sorted(results, key=lambda r: r.uid),
+                         (5 + 3 * i for i in range(7))):
+            assert r.iterations == it
+            assert np.abs(r.ranks - ref[it]).max() <= 1e-5
+
+    def test_queue_beyond_pool_drains_fifo(self, graph):
+        sch = SlotScheduler(graph, slots=2, method="pcpm",
+                            part_size=32, chunk=8)
+        for _ in range(6):
+            sch.submit(tol=0.0, max_iters=10)
+        assert sch.queued == 6 and sch.active_slots == 0
+        sch.step()
+        assert sch.active_slots == 2 and sch.queued == 4
+        sch.run_until_drained()
+        assert sch.queued == 0 and sch.active_slots == 0
+        assert len(sch.completed) == 6
+
+    def test_invalid_inputs_rejected(self, graph):
+        sch = SlotScheduler(graph, slots=1, method="pcpm",
+                            part_size=32)
+        with pytest.raises(ValueError, match="positive"):
+            sch.submit(np.zeros(graph.num_nodes, np.float32))
+        with pytest.raises(ValueError, match="top_k"):
+            sch.submit(top_k=0)
+        with pytest.raises(ValueError, match="max_iters"):
+            sch.submit(max_iters=-1)
+        with pytest.raises(ValueError, match="slot"):
+            SlotScheduler(graph, slots=0)
+
+
+# ------------------------------------------------------------- top-k path
+class TestTopK:
+    def test_topk_matches_full_vector(self, graph):
+        """Top-k ids/scores agree with the served full vector to 1e-6,
+        and only (k,) arrays come back from device."""
+        g = graph
+        seeds = np.zeros(g.num_nodes, np.float32)
+        seeds[11] = seeds[29] = 1.0
+        sch = SlotScheduler(g, slots=2, method="pcpm", part_size=32,
+                            chunk=4)
+        u_full = sch.submit(seeds, tol=0.0, max_iters=25)
+        u_topk = sch.submit(seeds, tol=0.0, max_iters=25, top_k=16)
+        by = {r.uid: r for r in sch.run_until_drained()}
+        full = by[u_full].ranks
+        tk = by[u_topk]
+        assert tk.ranks is None              # top-k ships no n-vector
+        assert tk.top_ids.shape == (16,)
+        assert tk.top_scores.shape == (16,)
+        np.testing.assert_allclose(tk.top_scores,
+                                   np.sort(full)[-16:][::-1], atol=1e-6)
+        np.testing.assert_allclose(full[tk.top_ids], tk.top_scores,
+                                   atol=1e-6)
+
+    def test_distinct_k_compiles_once_each(self, graph):
+        sch = SlotScheduler(graph, slots=1, method="pcpm",
+                            part_size=32)
+        for _ in range(2):
+            for k in (5, 9):
+                sch.submit(top_k=k, tol=0.0, max_iters=5)
+        sch.run_until_drained()
+        assert sorted(sch._topk_cache) == [5, 9]
+        assert sch.trace_count == 1
+
+
+# ------------------------------------------------------- sharded serving
+class TestShardedScheduler:
+    """Degenerate 1-shard coverage of the sharded chunk stepper in
+    tier-1 (the 8-device suite lives in test_distributed.py)."""
+
+    def test_sharded_serving_matches_reference(self, graph):
+        g = graph
+        sch = SlotScheduler(g, slots=2, sharded=True, chunk=4)
+        assert sch.sharded
+        uid_u = sch.submit(tol=0.0, max_iters=15)
+        seeds = np.zeros(g.num_nodes, np.float32)
+        seeds[7] = 2.0
+        uid_p = sch.submit(seeds, tol=0.0, max_iters=15, top_k=5)
+        by = {r.uid: r for r in sch.run_until_drained()}
+        ref = pagerank_reference(g, num_iterations=15)
+        assert np.abs(by[uid_u].ranks - ref).max() <= 1e-5
+        oracle = personalized_oracle(g, seeds, 15)
+        np.testing.assert_allclose(by[uid_p].top_scores,
+                                   np.sort(oracle)[-5:][::-1],
+                                   atol=1e-5)
+        # pad rows can never appear in top-k ids
+        assert (by[uid_p].top_ids < g.num_nodes).all()
+        assert sch.trace_count == 1
+
+
+# ------------------------------------------------------------- registry
+class TestGraphRegistry:
+    def test_multi_graph_process(self, graph):
+        g2 = generators.uniform_random(200, 2000, seed=5)
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "uni.npz")
+            graph_io.save(path, g2)
+            reg = GraphRegistry(slots=2, method="pcpm", part_size=32,
+                                chunk=4)
+            reg.add("kron", graph)
+            reg.load("uni", path)            # warm-loaded + compiled
+            assert reg.names() == ["kron", "uni"]
+            assert "kron" in reg and len(reg) == 2
+            assert reg.get("uni").trace_count == 1
+            reg.submit("kron", tol=0.0, max_iters=10)
+            reg.submit("uni", tol=0.0, max_iters=10)
+            out = reg.run_until_drained()
+        for name, g in (("kron", graph), ("uni", g2)):
+            ref = pagerank_reference(g, num_iterations=10)
+            assert np.abs(out[name][0].ranks - ref).max() <= 1e-5
+        with pytest.raises(KeyError, match="unknown graph"):
+            reg.get("nope")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.add("kron", graph)
+
+
+# -------------------------------------------------------------- metrics
+class TestMetrics:
+    def test_trace_lifecycle_and_summary(self):
+        t = iter(np.arange(0.0, 10.0, 0.5))
+        m = ServeMetrics(clock=lambda: float(next(t)))
+        m.submitted(0)          # t=0.0
+        m.submitted(1)          # t=0.5
+        m.admitted(0)           # t=1.0
+        m.admitted(1)           # t=1.5
+        m.completed(0, iterations=12, converged=True)    # t=2.0
+        m.completed(1, iterations=30, converged=False)   # t=2.5
+        s = m.summary()
+        assert s["count"] == 2
+        assert s["mean_iterations"] == 21.0
+        assert s["converged_frac"] == 0.5
+        # span = last done (2.5) - first submit (0.0)
+        assert abs(s["qps"] - 2 / 2.5) < 1e-9
+        assert abs(s["p99_ms"] - 2000.0) < 1e-6   # uid0: 2.0s latency
+        assert m.completed_count == 2
+
+    def test_shared_metrics_across_schedulers(self):
+        """Regression: uids are process-unique, so one ServeMetrics
+        shared by several schedulers (a registry's aggregate view)
+        never overwrites traces across graphs."""
+        shared = ServeMetrics()
+        g1 = generators.rmat(6, 4, seed=3)
+        g2 = generators.uniform_random(100, 800, seed=4)
+        reg = GraphRegistry(slots=2, method="pcpm", part_size=16,
+                            metrics=shared)
+        reg.add("a", g1)
+        reg.add("b", g2)
+        u1 = reg.submit("a", tol=0.0, max_iters=5)
+        u2 = reg.submit("b", tol=0.0, max_iters=5)
+        assert u1 != u2
+        reg.run_until_drained()
+        assert shared.summary()["count"] == 2
+
+    def test_scheduler_populates_metrics(self):
+        g = generators.rmat(6, 4, seed=3)
+        sch = SlotScheduler(g, slots=2, method="pcpm", part_size=16)
+        sch.submit(tol=0.0, max_iters=5)
+        sch.submit(tol=0.0, max_iters=5)
+        sch.run_until_drained()
+        s = sch.metrics.summary()
+        assert s["count"] == 2
+        assert s["mean_iterations"] == 5.0
+        assert s["qps"] > 0
+
+
+# ---------------------------------------- PageRankServer uniform cache
+class TestUniformBatchCache:
+    def test_cached_base_buffer_reused(self, graph):
+        srv = PageRankServer(graph, method="pcpm", part_size=32,
+                             num_iterations=10)
+        pr1, it1, _ = srv.query()
+        assert srv._uniform_cache is not None
+        host, base = srv._uniform_cache
+        pr2, it2, _ = srv.query()
+        assert srv._uniform_cache[1] is base   # device buffer reused
+        assert srv._uniform_cache[0] is host   # host batch not rebuilt
+        np.testing.assert_array_equal(np.asarray(pr1), np.asarray(pr2))
+        assert srv.trace_count == 1
+        # seeded queries bypass and do not disturb the cache
+        seeds = np.random.default_rng(0).random(
+            graph.num_nodes).astype(np.float32)
+        srv.query(seeds)
+        assert srv._uniform_cache[1] is base
+
+    def test_cache_matches_reference(self, graph):
+        srv = PageRankServer(graph, method="pcpm", part_size=32,
+                             num_iterations=20)
+        pr, _, _ = srv.query()
+        pr2, _, _ = srv.query()
+        ref = pagerank_reference(graph, num_iterations=20)
+        np.testing.assert_allclose(np.asarray(pr2), ref, rtol=1e-3,
+                                   atol=1e-7)
+
+
+# ------------------------------------------- ServeEngine head-of-line
+class TestServeEngineHeadOfLine:
+    def _engine(self, batch_slots=2, max_len=16):
+        from repro.configs import get
+        from repro.models import transformer as tf
+        from repro.serve import ServeEngine
+        cfg = get("tinyllama-1.1b").scaled(n_layers=1, d_model=32,
+                                           n_heads=2, d_ff=64, vocab=64)
+        params = tf.init_lm(cfg, jax.random.key(5))
+        return ServeEngine(cfg, params, batch_slots=batch_slots,
+                           max_len=max_len)
+
+    def test_never_fitting_head_does_not_starve_queue(self):
+        """Regression: a request whose prompt+budget can never fit the
+        static cache used to pin the queue head forever; now it is
+        rejected and the requests behind it are served."""
+        from repro.serve import Request
+        eng = self._engine(max_len=16)
+        huge = Request(uid=0, prompt=list(range(1, 41)),
+                       max_new_tokens=4)            # 40 + 4 >> 16
+        small = Request(uid=1, prompt=[3, 5], max_new_tokens=2)
+        eng.run_until_drained([huge, small], max_steps=200)
+        assert small.done and small.error is None
+        assert len(small.generated) == 2
+        assert huge.done and huge.error is not None
+        assert "max_len" in huge.error
+        assert not huge.generated                  # never admitted
+
+    def test_fitting_requests_unaffected(self):
+        from repro.serve import Request
+        eng = self._engine(max_len=32)
+        reqs = [Request(uid=i, prompt=[1 + i, 2 + i], max_new_tokens=3)
+                for i in range(5)]
+        eng.run_until_drained(reqs)
+        assert all(r.done and r.error is None for r in reqs)
+        assert all(len(r.generated) == 3 for r in reqs)
+
+    def test_add_request_rejects_unfitting(self):
+        from repro.serve import Request
+        eng = self._engine(max_len=16)
+        assert not eng.add_request(
+            Request(uid=0, prompt=list(range(1, 20)), max_new_tokens=4))
+        assert eng.active == 0
+        # exact-boundary request (prompt + budget == max_len) fits and
+        # completes in full
+        boundary = Request(uid=1, prompt=list(range(1, 13)),
+                           max_new_tokens=4)
+        assert eng.fits(boundary)
+        eng.run_until_drained([boundary], max_steps=100)
+        assert boundary.done and boundary.error is None
+        assert len(boundary.generated) == 4
