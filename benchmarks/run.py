@@ -105,6 +105,24 @@ def main(argv=None) -> int:
                       "derived": derived}
                      for n, us, derived in out.rows],
         }
+        # plan-build vs iterate split (the paper's preprocess-once
+        # amortization): aggregated from the e2e */plan and */iterate
+        # rows emitted by benchmarks/pagerank_e2e.py.  The fixed-size
+        # pallas_smoke rows are excluded — interpret-mode iteration is
+        # orders of magnitude slower and would dominate the ratio.
+        split_rows = [(n, us) for n, us, _ in out.rows
+                      if "pallas_smoke" not in n]
+        plan_us = sum(us for n, us in split_rows
+                      if n.endswith("/plan"))
+        iter_us = sum(us for n, us in split_rows
+                      if n.endswith("/iterate"))
+        if plan_us or iter_us:
+            doc["plan_vs_iterate"] = {
+                "plan_build_us": round(plan_us, 1),
+                "iterate_us": round(iter_us, 1),
+                "plan_frac": round(plan_us / max(plan_us + iter_us, 1e-9),
+                                   4),
+            }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {args.json}", flush=True)

@@ -13,31 +13,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spmv import (SpMVEngine, bvgas_scatter, bvgas_gather,
-                             pcpm_scatter, pcpm_gather_blocked)
+from repro.core.spmv import SpMVEngine
 from .common import Csv, Dataset, timeit
 
 
 def _phase_times(eng: SpMVEngine, x) -> tuple[float, float]:
-    if eng.method == "bvgas":
-        scatter = lambda: jax.block_until_ready(
-            bvgas_scatter(eng._bv.src, x))
-        bins = bvgas_scatter(eng._bv.src, x)
-        gather = lambda: jax.block_until_ready(
-            bvgas_gather(bins, eng._bv.dst, num_nodes=eng.num_nodes))
-    elif eng.method == "pcpm":
-        scatter = lambda: jax.block_until_ready(
-            pcpm_scatter(eng._png.update_src, x))
-        bins = pcpm_scatter(eng._png.update_src, x)
-        png = eng._png
-        gather = lambda: jax.block_until_ready(
-            pcpm_gather_blocked(bins, png.eui_padded, png.piece_start,
-                                png.piece_end, png.piece_dst,
-                                num_nodes=eng.num_nodes,
-                                block=png.gather_block))
-    else:
+    """Per-phase timing over the backend's public ``phase_fns`` seam
+    (the registry's two-phase contract, DESIGN.md §8)."""
+    if eng.backend.phase_fns is None:
         return 0.0, 0.0
-    return timeit(scatter), timeit(gather)
+    scatter, gather = eng.backend.phase_fns(eng.plan)
+    bins = scatter(x)
+    return (timeit(lambda: jax.block_until_ready(scatter(x))),
+            timeit(lambda: jax.block_until_ready(gather(bins))))
 
 
 def run(datasets: list[Dataset], *, part_size: int = 65536,
@@ -52,7 +40,7 @@ def run(datasets: list[Dataset], *, part_size: int = 65536,
             gteps = ds.m / t / 1e9
             csv.add(f"table4/{ds.name}/{method}/iter", t,
                     f"GTEPS={gteps:.3f}")
-            if phases and method != "pdpr":
+            if phases and eng.backend.supports_two_phase:
                 ts, tg = _phase_times(eng, x)
                 csv.add(f"table4/{ds.name}/{method}/scatter", ts)
                 csv.add(f"table4/{ds.name}/{method}/gather", tg)

@@ -1,30 +1,52 @@
-"""Quickstart: Partition-Centric PageRank in ~40 lines.
+"""Quickstart: Partition-Centric PageRank through the Session API.
 
     PYTHONPATH=src python examples/quickstart.py [--scale 16] [--serve]
 
-Builds a Graph500-style Kronecker graph, constructs the PNG layout
-(compress + transpose, paper §IV-B), runs 20 PageRank iterations with
-all three engines (PDPR / BVGAS / PCPM), checks they agree, and prints
-the paper's headline statistics: compression ratio r, modeled bytes per
-edge (eqs. 3-5), and measured per-iteration time.
+Builds a Graph500-style Kronecker graph and opens one ``repro.open``
+Session per engine: the session resolves the graph's ``GraphPlan``
+(PNG compress + transpose, partitioning, gather schedules — paper
+§IV-B) through the process-level plan cache, runs 20 PageRank
+iterations, checks the engines agree, and prints the paper's headline
+statistics: compression ratio r, modeled bytes per edge (eqs. 3-5)
+and measured per-iteration time.  The pcpm and pcpm_pallas plans share
+one PNG build, and re-opening a session costs zero preprocessing.
 
-``--serve`` continues into the serving layer: a continuous-batching
-SlotScheduler (DESIGN.md §7) answers a handful of mixed queries —
-personalized seeds, per-request tolerances, on-device top-k — from one
-AOT-compiled (n, B) stepper.  The full multi-graph demo is
+``--serve`` continues into the serving layer: ``sess.serve()`` hands
+back a continuous-batching SlotScheduler (DESIGN.md §7) answering
+mixed queries — personalized seeds, per-request tolerances, on-device
+top-k — from the SAME plan.  The full multi-graph demo is
 examples/serve_pagerank.py.
+
+Migration note (pre-Session API): the old entry points still work —
+
+    eng = SpMVEngine(g, method="pcpm", part_size=p)   # old
+    res = pagerank(g, engine=eng, num_iterations=20)
+    srv = PageRankServer(g, method="pcpm", ...)
+    sch = SlotScheduler(g, method="pcpm", ...)
+
+is now spelled
+
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=p))
+    res  = sess.pagerank(num_iterations=20)
+    srv  = sess.server(...)
+    sch  = sess.serve(...)
+
+The old constructors are thin shims over the same plan cache and
+backend registry, so both forms share plans and stay in lockstep;
+prefer the Session form — one EngineConfig instead of four keyword
+sets, and every workload amortizes one preprocessing pass.
 """
 import argparse
 import time
 
 import numpy as np
-import jax
 
-from repro.graphs import generators
-from repro.core.pagerank import pagerank, pagerank_reference
-from repro.core.spmv import SpMVEngine
+import repro
 from repro.core.comm_model import (ModelParams, pdpr_bytes, bvgas_bytes,
                                    pcpm_bytes)
+from repro.core.pagerank import pagerank_reference
+from repro.graphs import generators
 
 
 def main():
@@ -45,14 +67,16 @@ def main():
 
     results = {}
     for method in ("pdpr", "bvgas", "pcpm"):
-        eng = SpMVEngine(g, method=method, part_size=part_size)
+        sess = repro.open(g, repro.EngineConfig(
+            method=method, part_size=part_size,
+            num_iterations=args.iters))
         t0 = time.perf_counter()
-        res = pagerank(g, engine=eng, num_iterations=args.iters)
+        res = sess.pagerank()
         res.ranks.block_until_ready()
         dt = (time.perf_counter() - t0) / args.iters
         results[method] = np.asarray(res.ranks)
         gteps = g.num_edges / dt / 1e9
-        extra = (f"  r={eng.compression_ratio:.2f}"
+        extra = (f"  r={sess.plan.compression_ratio:.2f}"
                  if method == "pcpm" else "")
         print(f"{method:6s}: {dt * 1e3:7.1f} ms/iter "
               f"({gteps:.3f} GTEPS){extra}")
@@ -67,18 +91,21 @@ def main():
                                    atol=1e-7)
     print("engines agree ✓")
 
-    eng = SpMVEngine(g, method="pcpm", part_size=part_size)
+    # re-opening is free: the plan cache already holds this config
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=part_size))
+    stats = repro.plan_cache_stats()
+    print(f"plan cache: {stats.plan_builds} builds, "
+          f"{stats.plan_hits} hits (reopen cost zero preprocessing)")
     pm = ModelParams(g.num_nodes, g.num_edges,
-                     eng.partitioning.num_partitions,
-                     eng.compression_ratio)
+                     sess.plan.partitioning.num_partitions,
+                     sess.plan.compression_ratio)
     print(f"modeled bytes/edge  pdpr(worst)={pdpr_bytes(pm)/g.num_edges:.1f}"
           f"  bvgas={bvgas_bytes(pm)/g.num_edges:.1f}"
           f"  pcpm={pcpm_bytes(pm)/g.num_edges:.1f}")
 
     if args.serve:
-        from repro.serve import SlotScheduler
-        sch = SlotScheduler(g, slots=4, method="pcpm",
-                            part_size=part_size, chunk=4)
+        sch = sess.serve(slots=4, chunk=4)     # shares the session plan
         sch.submit(tol=0.0, max_iters=args.iters)          # uniform
         seeds = np.zeros(g.num_nodes, np.float32)
         seeds[0] = 1.0

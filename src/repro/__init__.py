@@ -1,0 +1,26 @@
+"""JAX/Pallas reproduction of 'Accelerating PageRank using
+Partition-Centric Processing' — public API.
+
+    import repro
+    sess = repro.open(g, repro.EngineConfig(method="pcpm"))
+    res  = sess.pagerank()
+    sch  = sess.serve()
+
+The plan/run split behind this facade lives in ``repro.core.plan``
+(one immutable ``GraphPlan`` per (graph, config), process-cached and
+``.npz``-serializable) and ``repro.core.backends`` (the engine
+registry all consumers dispatch through) — see DESIGN.md §8.
+"""
+from .api import EngineConfig, Session, open
+from .core.backends import (Backend, available_backends, get_backend,
+                            register_backend)
+from .core.plan import (GraphPlan, PlanConfig, build_plan,
+                        clear_plan_cache, evict_plans, install_plan,
+                        plan_cache_stats)
+
+__all__ = [
+    "EngineConfig", "Session", "open",
+    "Backend", "available_backends", "get_backend", "register_backend",
+    "GraphPlan", "PlanConfig", "build_plan", "clear_plan_cache",
+    "evict_plans", "install_plan", "plan_cache_stats",
+]

@@ -1,0 +1,138 @@
+"""The front door: ``repro.open(g, EngineConfig(...))`` (DESIGN.md §8).
+
+One ``EngineConfig`` unifies the method / part_size / num_shards /
+damping / tol / iters / dangling / slots knobs that used to be
+duplicated across four constructors (``SpMVEngine``, ``pagerank()``,
+``PageRankServer``, ``SlotScheduler``).  A ``Session`` resolves the
+graph's ``GraphPlan`` ONCE through the process-level plan cache and
+serves every workload from it:
+
+    sess = repro.open(g, repro.EngineConfig(method="pcpm"))
+    res  = sess.pagerank()                  # fused while_loop driver
+    y    = sess.spmv(x)                     # one A^T x pass
+    sch  = sess.serve()                     # continuous-batching pool
+    srv  = sess.server(batch=8)             # AOT lockstep batch server
+    sess.plan.save("web.plan.npz")          # persist the preprocessing
+
+The old entry points keep working as thin shims over the same plan
+cache and backend registry, so both paths stay test-covered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .core.pagerank import PageRankResult, pagerank
+from .core.plan import (DEFAULT_GATHER_BLOCK, GraphPlan, PlanConfig,
+                        build_plan)
+from .core.spmv import SpMVEngine
+from .graphs.formats import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every knob of the plan AND run layers in one hashable value.
+
+    Plan-layer fields (select the ``GraphPlan``): ``method``,
+    ``part_size``, ``num_shards``, ``gather_block``.
+    Run-layer fields are the iteration/serving defaults a ``Session``
+    applies; each method accepts per-call overrides.
+    """
+    # plan layer
+    method: str = "pcpm"
+    part_size: int = 65536
+    num_shards: Optional[int] = None      # sharding backends; None = all
+    gather_block: int = DEFAULT_GATHER_BLOCK
+    two_phase: bool = False               # rejected by Session (fused)
+    # run layer: iteration
+    damping: float = 0.85
+    num_iterations: int = 20
+    tol: float = 0.0
+    check_every: int = 1
+    dangling: str = "none"
+    # run layer: serving
+    slots: int = 4
+    chunk: int = 8
+
+    def plan_config(self) -> PlanConfig:
+        return PlanConfig(method=self.method, part_size=self.part_size,
+                          num_shards=self.num_shards,
+                          gather_block=self.gather_block)
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class Session:
+    """One graph, one plan, every workload.
+
+    Construction resolves (or builds, exactly once per process) the
+    ``GraphPlan`` for ``(g, config)``; ``pagerank``/``spmv``/``serve``/
+    ``server`` all run from that single plan — the build count stays 1
+    no matter how many workloads the session fans out (asserted in
+    tests/test_api.py).
+    """
+
+    def __init__(self, g: Graph, config: EngineConfig | None = None,
+                 **overrides):
+        cfg = config or EngineConfig()
+        if overrides:
+            cfg = cfg.replace(**overrides)
+        if cfg.two_phase:
+            raise ValueError(
+                "two_phase=True cannot be combined with the Session's "
+                "fused consumers (pagerank/serve run under jit, where "
+                "the host-side phase barrier does not exist); build a "
+                "two-phase SpMVEngine directly for phase timing.")
+        self.graph = g
+        self.config = cfg
+        self.plan: GraphPlan = build_plan(g, cfg.plan_config())
+        self.engine = SpMVEngine(g, plan=self.plan)
+
+    # ------------------------------------------------------------- run
+    def spmv(self, x) -> jnp.ndarray:
+        """One y = A^T x pass ((n,) or (n, d)) on the plan's backend."""
+        return self.engine(jnp.asarray(x))
+
+    def pagerank(self, **overrides) -> PageRankResult:
+        """Run the fused power iteration with the session defaults;
+        keyword overrides (num_iterations/tol/damping/check_every/
+        dangling/driver) apply per call."""
+        cfg = self.config
+        kw = dict(num_iterations=cfg.num_iterations, damping=cfg.damping,
+                  tol=cfg.tol, check_every=cfg.check_every,
+                  dangling=cfg.dangling)
+        kw.update(overrides)
+        return pagerank(self.graph, engine=self.engine, **kw)
+
+    def serve(self, **overrides):
+        """A continuous-batching ``SlotScheduler`` sharing this
+        session's plan (and compiled device streams)."""
+        from .serve.scheduler import SlotScheduler
+        cfg = self.config
+        kw = dict(slots=cfg.slots, damping=cfg.damping, chunk=cfg.chunk,
+                  dangling=cfg.dangling)
+        kw.update(overrides)
+        return SlotScheduler(self.graph, engine=self.engine, **kw)
+
+    def server(self, *, batch: int = 1, **overrides):
+        """An AOT-compiled lockstep ``PageRankServer`` sharing this
+        session's plan (batched personalized queries)."""
+        from .serve.engine import PageRankServer
+        cfg = self.config
+        kw = dict(damping=cfg.damping, num_iterations=cfg.num_iterations,
+                  tol=cfg.tol, check_every=cfg.check_every,
+                  dangling=cfg.dangling)
+        kw.update(overrides)
+        return PageRankServer(self.graph, engine=self.engine,
+                              batch=batch, **kw)
+
+
+def open(g: Graph, config: EngineConfig | None = None,
+         **overrides) -> Session:
+    """Open a :class:`Session` on ``g`` — the public front door.
+    ``overrides`` are ``EngineConfig`` fields applied on top of
+    ``config`` (or the defaults): ``repro.open(g, method="pdpr")``."""
+    return Session(g, config, **overrides)

@@ -1,0 +1,379 @@
+"""Backend registry — the run-layer half of the plan/run split
+(DESIGN.md §8).
+
+Every SpMV engine registers ONE ``Backend`` entry:
+
+- ``build_plan(g, cfg) -> GraphPlan``: the host-side preprocessing
+  (edge sorts, PNG build, schedules) for that method;
+- ``spmv_fn(plan) -> (x -> A^T x)``: a pure traceable closure over the
+  plan's device-resident streams — what the fused ``lax.while_loop``
+  drivers, the chunk steppers and AOT compilation consume;
+- capability flags (``supports_sharding``, ``supports_aot``,
+  ``multi_vector``, ``supports_two_phase``) that consumers branch on
+  instead of comparing method strings.
+
+``SpMVEngine``, ``pagerank()``, ``PageRankServer`` and
+``SlotScheduler`` all resolve backends through this table, so a new
+engine plugs in with one ``register_backend`` call and no call-site
+edits.  Device-side uploads are cached on ``plan._device`` — shared by
+every consumer of the same plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..graphs.formats import Graph
+from .partition import Partitioning
+from .plan import GraphPlan, PlanConfig, shared_png
+from .png import block_png, build_gather_schedule
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One SpMV engine: plan builder + runner + capabilities.
+
+    ``phase_fns`` (optional) returns ``(scatter, gather)`` closures
+    over the plan's device streams — the seam for paper-faithful
+    phase timing (benchmarks/table4_runtime.py) and for the
+    ``two_phase=True`` host-barrier execution; backends without it
+    reject ``two_phase=True`` at engine construction.
+    """
+    name: str
+    build_plan: Callable[[Graph, PlanConfig], GraphPlan]
+    spmv_fn: Callable[[GraphPlan], Callable]
+    supports_sharding: bool = False    # runs under shard_map on a mesh
+    supports_aot: bool = True          # closure is .lower().compile()-able
+    multi_vector: bool = True          # accepts (n, d) as well as (n,)
+    uses_gather_block: bool = False    # plan depends on cfg.gather_block
+    phase_fns: Optional[
+        Callable[[GraphPlan], tuple[Callable, Callable]]] = None
+
+    @property
+    def supports_two_phase(self) -> bool:
+        return self.phase_fns is not None
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown method {name!r}; registered: "
+                         f"{available_backends()}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_method(method: str, *, sharded: bool = False) -> str:
+    """Map a requested method (+ the ``sharded=True`` convenience flag
+    of the serving front-ends) to a registered backend name: when the
+    named backend cannot shard, fall back to the registered
+    sharding-capable one."""
+    backend = get_backend(method)
+    if not sharded or backend.supports_sharding:
+        return method
+    for b in _REGISTRY.values():
+        if b.supports_sharding:
+            return b.name
+    raise ValueError("sharded=True but no registered backend supports "
+                     "sharding")
+
+
+def check_device_count(num_shards: int) -> None:
+    """The single home of the shards-vs-devices rule (used by config
+    normalization, the engine's loaded-plan path and mesh building)."""
+    avail = jax.device_count()
+    if num_shards > avail:
+        raise ValueError(f"num_shards={num_shards} exceeds the "
+                         f"{avail} available devices")
+
+
+def resolve_engine(g: Graph, *, method: str, sharded: bool,
+                   part_size: int, num_shards: Optional[int],
+                   engine=None):
+    """Shared engine resolution of the serving front-ends
+    (``PageRankServer``, ``SlotScheduler``): construct through the
+    registry when no engine is given, otherwise validate the caller's
+    engine against the ``sharded=True`` request."""
+    from .spmv import SpMVEngine
+    if engine is None:
+        return SpMVEngine(g, part_size=part_size, num_shards=num_shards,
+                          method=resolve_method(method, sharded=sharded))
+    if sharded and not engine.backend.supports_sharding:
+        raise ValueError(
+            "sharded=True requires a sharding-capable engine; got "
+            f"method={engine.method!r}")
+    return engine
+
+
+def normalize_config(g: Graph, cfg: PlanConfig) -> PlanConfig:
+    """Canonical cache key: resolve ``num_shards=None`` to the device
+    count for sharding backends (validating the bound), and blank the
+    knobs a backend ignores (sharding fields, gather_block) so configs
+    differing only in irrelevant knobs share one plan."""
+    from .plan import DEFAULT_GATHER_BLOCK
+    backend = get_backend(cfg.method)
+    kw = {}
+    if backend.supports_sharding:
+        shards = cfg.num_shards or jax.device_count()
+        check_device_count(shards)
+        if shards != cfg.num_shards:
+            kw["num_shards"] = shards
+    elif cfg.num_shards is not None:
+        kw["num_shards"] = None
+    # the mesh axis NAME never affects host preprocessing (meshes are
+    # cached per axis on plan._device) — keep it out of the cache key
+    if cfg.shard_axis != "shards":
+        kw["shard_axis"] = "shards"
+    if (not backend.uses_gather_block
+            and cfg.gather_block != DEFAULT_GATHER_BLOCK):
+        kw["gather_block"] = DEFAULT_GATHER_BLOCK
+    return cfg.replace(**kw) if kw else cfg
+
+
+def spmv_fn(plan: GraphPlan):
+    """The plan's runner closure, built once and cached on the plan —
+    every consumer (engine, drivers, steppers, AOT server) of one plan
+    shares one closure and one set of device uploads."""
+    fn = plan._device.get("spmv")
+    if fn is None:
+        fn = get_backend(plan.method).spmv_fn(plan)
+        plan._device["spmv"] = fn
+    return fn
+
+
+def two_phase_spmv_fn(plan: GraphPlan):
+    """The plan's host-barriered scatter/gather closure (backends with
+    ``phase_fns`` only), cached like ``spmv_fn``.  The barrier makes
+    the bins round-trip through HBM exactly as the paper's bins
+    round-trip through DRAM (phase-timing fidelity)."""
+    fn = plan._device.get("two_phase_spmv")
+    if fn is None:
+        backend = get_backend(plan.method)
+        if backend.phase_fns is None:
+            raise ValueError(f"backend {plan.method!r} does not support "
+                             "two_phase execution")
+        scatter, gather = backend.phase_fns(plan)
+
+        def fn(x):
+            return gather(jax.block_until_ready(scatter(x)))
+
+        plan._device["two_phase_spmv"] = fn
+    return fn
+
+
+def fused_loop_cache(plan: GraphPlan) -> dict:
+    """Per-plan cache of jitted iteration loops/steppers (keyed on
+    their hyper-parameters) — shared across every engine wrapping the
+    same plan so e.g. ``Session.pagerank()`` and a later shim call
+    reuse one trace."""
+    return plan._device.setdefault("fused_cache", {})
+
+
+def sharded_mesh(plan: GraphPlan, axis: str | None = None):
+    """The 1-D device mesh a sharded plan runs on (built lazily,
+    cached per axis name on the plan).  Raises when the plan wants
+    more shards than this runtime has devices — e.g. an 8-shard plan
+    loaded on a 1-device box — instead of silently truncating the
+    mesh against the plan's fixed-shape shard arrays."""
+    from jax.sharding import Mesh
+    axis = axis or plan.config.shard_axis
+    if plan.sharded is None:
+        raise ValueError(
+            f"backend {plan.method!r} has no sharded layout (mesh is "
+            "only meaningful for sharding backends)")
+    shards = plan.sharded.num_shards
+    check_device_count(shards)
+    key = ("mesh", axis)
+    mesh = plan._device.get(key)
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()[:shards]), (axis,))
+        plan._device[key] = mesh
+    return mesh
+
+
+# ---------------------------------------------------------------------------
+# pdpr — pull-direction baseline (paper alg. 1)
+# ---------------------------------------------------------------------------
+def _plan_fields(g: Graph, cfg: PlanConfig) -> dict:
+    return dict(config=cfg, num_nodes=g.num_nodes, num_edges=g.num_edges,
+                partitioning=Partitioning(g.num_nodes, cfg.part_size))
+
+
+def _build_pdpr(g: Graph, cfg: PlanConfig) -> GraphPlan:
+    order = np.lexsort((g.src, g.dst))
+    return GraphPlan(csc_src=g.src[order], csc_dst=g.dst[order],
+                     **_plan_fields(g, cfg))
+
+
+def _pdpr_device(plan: GraphPlan):
+    dev = plan._device.get("pdpr")
+    if dev is None:
+        dev = (jnp.asarray(plan.csc_src), jnp.asarray(plan.csc_dst))
+        plan._device["pdpr"] = dev
+    return dev
+
+
+def _spmv_pdpr(plan: GraphPlan):
+    from .spmv import pdpr_spmv
+    src, dst = _pdpr_device(plan)
+    n = plan.num_nodes
+    return lambda x: pdpr_spmv(src, dst, x, num_nodes=n)
+
+
+# ---------------------------------------------------------------------------
+# bvgas — Binning w/ Vertex-centric GAS (paper alg. 2)
+# ---------------------------------------------------------------------------
+def _build_bvgas(g: Graph, cfg: PlanConfig) -> GraphPlan:
+    dstp = g.dst.astype(np.int64) // cfg.part_size
+    order = np.lexsort((g.dst, g.src, dstp))
+    return GraphPlan(bv_src=g.src[order], bv_dst=g.dst[order],
+                     **_plan_fields(g, cfg))
+
+
+def _bvgas_device(plan: GraphPlan):
+    dev = plan._device.get("bvgas")
+    if dev is None:
+        dev = (jnp.asarray(plan.bv_src), jnp.asarray(plan.bv_dst))
+        plan._device["bvgas"] = dev
+    return dev
+
+
+def _spmv_bvgas(plan: GraphPlan):
+    from .spmv import bvgas_gather, bvgas_scatter
+    src, dst = _bvgas_device(plan)
+    n = plan.num_nodes
+    return lambda x: bvgas_gather(bvgas_scatter(src, x), dst,
+                                  num_nodes=n)
+
+
+def _phases_bvgas(plan: GraphPlan):
+    from .spmv import bvgas_gather, bvgas_scatter
+    src, dst = _bvgas_device(plan)
+    n = plan.num_nodes
+    return (lambda x: bvgas_scatter(src, x),
+            lambda bins: bvgas_gather(bins, dst, num_nodes=n))
+
+
+# ---------------------------------------------------------------------------
+# pcpm — Partition-Centric, blocked hierarchical gather (paper algs. 4+5)
+# ---------------------------------------------------------------------------
+def _build_pcpm(g: Graph, cfg: PlanConfig) -> GraphPlan:
+    png = shared_png(g, cfg.part_size)
+    sched = build_gather_schedule(png, block=cfg.gather_block)
+    return GraphPlan(png=png, schedule=sched, **_plan_fields(g, cfg))
+
+
+def _pcpm_device(plan: GraphPlan):
+    dev = plan._device.get("pcpm")
+    if dev is None:
+        s = plan.schedule
+        dev = (jnp.asarray(plan.png.update_src),
+               jnp.asarray(s.edge_update_idx_padded),
+               jnp.asarray(s.piece_start), jnp.asarray(s.piece_end),
+               jnp.asarray(s.piece_dst))
+        plan._device["pcpm"] = dev
+    return dev
+
+
+def _spmv_pcpm(plan: GraphPlan):
+    from .spmv import pcpm_gather_blocked, pcpm_scatter
+    upd, eui, ps, pe, pd = _pcpm_device(plan)
+    n, blk = plan.num_nodes, plan.schedule.block
+    return lambda x: pcpm_gather_blocked(
+        pcpm_scatter(upd, x), eui, ps, pe, pd, num_nodes=n, block=blk)
+
+
+def _phases_pcpm(plan: GraphPlan):
+    from .spmv import pcpm_gather_blocked, pcpm_scatter
+    upd, eui, ps, pe, pd = _pcpm_device(plan)
+    n, blk = plan.num_nodes, plan.schedule.block
+    return (lambda x: pcpm_scatter(upd, x),
+            lambda bins: pcpm_gather_blocked(bins, eui, ps, pe, pd,
+                                             num_nodes=n, block=blk))
+
+
+# ---------------------------------------------------------------------------
+# pcpm_pallas — the Pallas gather kernel path (kernels/pcpm_spmv)
+# ---------------------------------------------------------------------------
+def _build_pcpm_pallas(g: Graph, cfg: PlanConfig) -> GraphPlan:
+    png = shared_png(g, cfg.part_size)
+    return GraphPlan(png=png, blocked=block_png(png),
+                     **_plan_fields(g, cfg))
+
+
+def _packed_device(plan: GraphPlan):
+    dev = plan._device.get("packed")
+    if dev is None:
+        from ..kernels.pcpm_spmv import pack_blocked
+        dev = pack_blocked(plan.blocked, plan.num_nodes)
+        plan._device["packed"] = dev
+    return dev
+
+
+def _spmv_pcpm_pallas(plan: GraphPlan):
+    from ..kernels.pcpm_spmv import pcpm_spmv_pallas
+    packed = _packed_device(plan)
+    return lambda x: pcpm_spmv_pallas(packed, x)
+
+
+# ---------------------------------------------------------------------------
+# pcpm_sharded — multi-device all-to-all PCPM (core/distributed.py)
+# ---------------------------------------------------------------------------
+def _build_pcpm_sharded(g: Graph, cfg: PlanConfig) -> GraphPlan:
+    from .distributed import build_sharded_png
+    layout = build_sharded_png(g, cfg.num_shards,
+                               gather_block=cfg.gather_block)
+    return GraphPlan(sharded=layout, **_plan_fields(g, cfg))
+
+
+def _spmv_pcpm_sharded(plan: GraphPlan):
+    from .distributed import pcpm_all_to_all_spmv
+    axis = plan.config.shard_axis
+    key = ("sharded_spmv", axis)
+    spmv = plan._device.get(key)
+    if spmv is None:
+        spmv = pcpm_all_to_all_spmv(plan.sharded, sharded_mesh(plan, axis),
+                                    axis)
+        plan._device[key] = spmv
+    n, n_pad = plan.num_nodes, plan.sharded.padded_nodes
+
+    def fn(x):
+        width = ((0, n_pad - n),) + ((0, 0),) * (x.ndim - 1)
+        return spmv(jnp.pad(x, width))[:n]
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+for _backend in (
+    Backend("pdpr", _build_pdpr, _spmv_pdpr),
+    Backend("bvgas", _build_bvgas, _spmv_bvgas,
+            phase_fns=_phases_bvgas),
+    Backend("pcpm", _build_pcpm, _spmv_pcpm, uses_gather_block=True,
+            phase_fns=_phases_pcpm),
+    Backend("pcpm_pallas", _build_pcpm_pallas, _spmv_pcpm_pallas),
+    Backend("pcpm_sharded", _build_pcpm_sharded, _spmv_pcpm_sharded,
+            supports_sharding=True, uses_gather_block=True),
+):
+    register_backend(_backend)

@@ -18,6 +18,12 @@ with zero host round-trips (DESIGN.md §6).
 
 ``edge_cut_spmv`` is the distributed BVGAS analogue (one update PER
 EDGE on the wire) used as the communication baseline.
+
+``ShardedPNG`` is a plan-layer artifact: the ``pcpm_sharded`` backend
+(core/backends.py) builds it into the process-cached ``GraphPlan``
+(core/plan.py), which also serializes it — consumers get it via
+``engine.sharded_layout`` / ``plan.sharded`` rather than calling
+``build_sharded_png`` directly (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -504,9 +510,15 @@ def distributed_pagerank(g: Graph, mesh: Mesh, axis: str, *,
                          num_iterations: int = 20, damping: float = 0.85,
                          tol: float = 0.0, check_every: int = 1,
                          dangling: str = "none",
-                         layout: ShardedPNG | None = None):
+                         layout: ShardedPNG | None = None,
+                         fused_cache: dict | None = None):
     """PageRank over the sharded PCPM engine — one donated fused
     ``lax.while_loop`` dispatch for the whole run (DESIGN.md §6).
+
+    ``fused_cache`` (the plan-level loop cache when called through
+    ``pagerank()``/``Session``) memoizes the jitted run per
+    hyper-parameter set, so repeated calls skip the shard_map
+    re-trace + re-compile exactly like the single-device driver.
 
     Returns a ``PageRankResult`` (ranks sliced back to ``num_nodes``).
     """
@@ -515,10 +527,17 @@ def distributed_pagerank(g: Graph, mesh: Mesh, axis: str, *,
                               zip(mesh.axis_names, mesh.devices.shape)
                               if nme == axis]))
     layout = layout or build_sharded_png(g, num_shards)
-    run = sharded_power_iteration(layout, mesh, axis, damping=damping,
-                                  num_iterations=num_iterations,
-                                  tol=tol, check_every=check_every,
-                                  dangling=dangling)
+    key = ("sharded_fused", axis, damping, num_iterations, tol,
+           check_every, dangling)
+    run = fused_cache.get(key) if fused_cache is not None else None
+    if run is None:
+        run = sharded_power_iteration(layout, mesh, axis,
+                                      damping=damping,
+                                      num_iterations=num_iterations,
+                                      tol=tol, check_every=check_every,
+                                      dangling=dangling)
+        if fused_cache is not None:
+            fused_cache[key] = run
     n = g.num_nodes
     n_pad = layout.padded_nodes
     sharding = NamedSharding(mesh, P(axis))

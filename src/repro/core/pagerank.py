@@ -203,14 +203,15 @@ def masked_chunk_stepper(engine: SpMVEngine, *, damping: float = 0.85,
 def _run_fused(g: Graph, eng: SpMVEngine, *, num_iterations: int,
                damping: float, tol: float, check_every: int,
                dangling: str) -> PageRankResult:
-    if eng.method == "pcpm_sharded":
-        # the sharded engine owns its own fused loop (all-to-all +
+    if eng.backend.supports_sharding:
+        # a sharding backend owns its own fused loop (all-to-all +
         # blocked gather + psum residual under shard_map)
         from .distributed import distributed_pagerank
         return distributed_pagerank(
             g, eng.mesh, eng.shard_axis, num_iterations=num_iterations,
             damping=damping, tol=tol, check_every=check_every,
-            dangling=dangling, layout=eng.sharded_layout)
+            dangling=dangling, layout=eng.sharded_layout,
+            fused_cache=eng._fused_cache)
     n = g.num_nodes
     run = fused_power_iteration(eng, damping=damping,
                                 num_iterations=num_iterations, tol=tol,
@@ -255,6 +256,10 @@ def pagerank(g: Graph, *, method: str = "pcpm", num_iterations: int = 20,
              tol: float = 0.0, engine: SpMVEngine | None = None,
              driver: str = "fused", check_every: int = 1,
              dangling: str = "none") -> PageRankResult:
+    """Compatibility front-end.  ``method`` is resolved through the
+    backend registry and the graph plan comes from the process-level
+    plan cache, so repeated calls on one graph never re-sort edges.
+    New code should prefer ``repro.open(g, cfg).pagerank()``."""
     eng = engine or SpMVEngine(g, method=method, part_size=part_size)
     if driver == "python" or eng.two_phase:
         return _run_python(g, eng, num_iterations=num_iterations,

@@ -1,0 +1,391 @@
+"""GraphPlan — the immutable preprocessing artifact (DESIGN.md §8).
+
+The paper's central amortization argument (§VI-D3) is that PCPM is a
+*preprocess-then-iterate* method: the PNG layout, partitioning and
+gather schedules are built once on the host and reused by every
+subsequent SpMV.  This module makes that artifact a first-class value:
+
+- ``PlanConfig``: the hashable knob set that determines a plan
+  (method, part_size, num_shards, gather_block) — one config type
+  instead of four constructors' keyword soup.
+- ``GraphPlan``: everything host-side preprocessing produces for one
+  ``(graph, PlanConfig)`` — ``Partitioning``, ``PNGLayout``, blocked /
+  gather-schedule variants, sharded layouts.  Immutable and hashable
+  (identity), with a non-serialized device-side cache (``_device``)
+  where backends park uploaded streams, packed kernels, meshes and
+  jitted closures.
+- a process-level plan cache keyed on ``(graph fingerprint, config)``
+  — every consumer (``SpMVEngine``, ``pagerank()``, ``PageRankServer``,
+  ``SlotScheduler``, ``Session``) resolves plans through it, so one
+  graph served four ways still sorts its edges exactly once.
+- ``save``/``load`` to ``.npz`` so million-node plans load warm
+  instead of re-sorting edges (what ``GraphRegistry`` warm-loading
+  stores).
+
+The per-backend *build* functions live in ``core/backends.py``; this
+module only owns the artifact, the cache and the serialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Optional
+
+import numpy as np
+
+from ..graphs.formats import Graph
+from .partition import Partitioning
+from .png import BlockedPNG, GatherSchedule, PNGLayout, build_png
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+DEFAULT_GATHER_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """Host-preprocessing knobs.  Hashable — the cache key half."""
+    method: str = "pcpm"
+    part_size: int = 65536
+    num_shards: Optional[int] = None   # sharded backends; None = all devices
+    shard_axis: str = "shards"
+    gather_block: int = DEFAULT_GATHER_BLOCK
+
+    def replace(self, **kw) -> "PlanConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)   # eq=False: identity hash
+class GraphPlan:
+    """Everything host-side preprocessing produced for one
+    ``(graph, PlanConfig)``.  Only the fields the plan's backend needs
+    are populated; the rest stay None.
+
+    ``_device`` is a runtime-only cache (device uploads, packed kernel
+    layouts, meshes, jitted spmv closures, the fused-loop cache) — it
+    never serializes and never participates in plan identity.
+    """
+    config: PlanConfig
+    num_nodes: int
+    num_edges: int
+    partitioning: Partitioning
+    # pdpr: edges in pull (dst-sorted) order
+    csc_src: Optional[np.ndarray] = None
+    csc_dst: Optional[np.ndarray] = None
+    # bvgas: edges in dst-partition-major order
+    bv_src: Optional[np.ndarray] = None
+    bv_dst: Optional[np.ndarray] = None
+    # pcpm / pcpm_pallas
+    png: Optional[PNGLayout] = None
+    schedule: Optional[GatherSchedule] = None
+    blocked: Optional[BlockedPNG] = None
+    # pcpm_sharded (core/distributed.py ShardedPNG; typed loosely to
+    # keep this module importable without the distributed stack)
+    sharded: Optional[Any] = None
+    # content hash of the graph this plan was built from — lets
+    # install_plan refuse a plan/graph mismatch instead of silently
+    # serving wrong preprocessing
+    graph_fp: Optional[str] = None
+    _device: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # ------------------------------------------------------------- views
+    @property
+    def method(self) -> str:
+        return self.config.method
+
+    @property
+    def part_size(self) -> int:
+        return self.config.part_size
+
+    @property
+    def num_shards(self) -> Optional[int]:
+        return self.config.num_shards
+
+    @property
+    def compression_ratio(self) -> float:
+        """r = |E| / |E'| — on the wire for sharded plans (paper
+        table V / DESIGN.md §6), in DRAM traffic otherwise."""
+        if self.sharded is not None:
+            return self.sharded.wire_compression
+        if self.png is not None:
+            return self.png.compression_ratio
+        return 1.0
+
+    # ----------------------------------------------------- serialization
+    def save(self, path: str) -> None:
+        """Persist the host-side artifact as one compressed ``.npz``.
+
+        Device-side state (``_device``) is rebuilt on first use after
+        ``load`` — meshes and compiled closures are runtime-specific.
+        """
+        arrays: dict[str, np.ndarray] = {}
+        meta: dict[str, Any] = {
+            "version": 1,
+            "config": dataclasses.asdict(self.config),
+            "num_nodes": self.num_nodes,
+            "num_edges": self.num_edges,
+            "graph_fp": self.graph_fp,
+        }
+        for key in ("csc_src", "csc_dst", "bv_src", "bv_dst"):
+            arr = getattr(self, key)
+            if arr is not None:
+                arrays[key] = arr
+        if self.png is not None:
+            p = self.png
+            arrays.update({"png/update_src": p.update_src,
+                           "png/update_offsets": p.update_offsets,
+                           "png/edge_update_idx": p.edge_update_idx,
+                           "png/edge_dst": p.edge_dst,
+                           "png/edge_offsets": p.edge_offsets})
+        if self.schedule is not None:
+            s = self.schedule
+            meta["schedule"] = {"block": s.block, "num_edges": s.num_edges}
+            arrays.update({"sched/eui": s.edge_update_idx_padded,
+                           "sched/piece_start": s.piece_start,
+                           "sched/piece_end": s.piece_end,
+                           "sched/piece_dst": s.piece_dst})
+        if self.blocked is not None:
+            b = self.blocked
+            meta["blocked"] = {"part_size": b.part_size,
+                               "update_pad_frac": b.update_pad_frac,
+                               "edge_pad_frac": b.edge_pad_frac}
+            arrays.update({"blk/update_src": b.update_src,
+                           "blk/edge_update_local": b.edge_update_local,
+                           "blk/edge_dst_local": b.edge_dst_local})
+        if self.sharded is not None:
+            h = self.sharded
+            meta["sharded"] = {"num_shards": h.num_shards,
+                               "shard_size": h.shard_size,
+                               "num_nodes": h.num_nodes,
+                               "gather_block": h.gather_block,
+                               "wire_updates": h.wire_updates,
+                               "wire_edges": h.wire_edges}
+            arrays.update({"shd/send_ids": h.send_ids,
+                           "shd/edge_upd": h.edge_upd,
+                           "shd/edge_dst": h.edge_dst,
+                           "shd/eui_padded": h.eui_padded,
+                           "shd/piece_start": h.piece_start,
+                           "shd/piece_end": h.piece_end,
+                           "shd/piece_dst": h.piece_dst})
+        np.savez_compressed(path, __meta__=json.dumps(meta), **arrays)
+
+    @staticmethod
+    def load(path: str) -> "GraphPlan":
+        z = np.load(path, allow_pickle=False)
+        if "__meta__" not in z:
+            raise ValueError(
+                f"{path!r} is not a GraphPlan file (no __meta__ entry "
+                "— a raw graph npz goes through graphs.io.load)")
+        meta = json.loads(str(z["__meta__"]))
+        if meta.get("version") != 1:
+            raise ValueError(
+                f"unsupported plan format version {meta.get('version')!r}"
+                f" in {path!r} (this build reads version 1)")
+        cfg = PlanConfig(**meta["config"])
+        n, m = int(meta["num_nodes"]), int(meta["num_edges"])
+        part = Partitioning(n, cfg.part_size)
+        kw: dict[str, Any] = {}
+        for key in ("csc_src", "csc_dst", "bv_src", "bv_dst"):
+            if key in z:
+                kw[key] = z[key]
+        if "png/update_src" in z:
+            kw["png"] = PNGLayout(part, z["png/update_src"],
+                                  z["png/update_offsets"],
+                                  z["png/edge_update_idx"],
+                                  z["png/edge_dst"],
+                                  z["png/edge_offsets"], n, m)
+        if "schedule" in meta:
+            s = meta["schedule"]
+            kw["schedule"] = GatherSchedule(
+                int(s["block"]), int(s["num_edges"]), z["sched/eui"],
+                z["sched/piece_start"], z["sched/piece_end"],
+                z["sched/piece_dst"])
+        if "blocked" in meta:
+            b = meta["blocked"]
+            kw["blocked"] = BlockedPNG(
+                int(b["part_size"]), z["blk/update_src"],
+                z["blk/edge_update_local"], z["blk/edge_dst_local"],
+                float(b["update_pad_frac"]), float(b["edge_pad_frac"]))
+        if "sharded" in meta:
+            from .distributed import ShardedPNG
+            h = meta["sharded"]
+            kw["sharded"] = ShardedPNG(
+                int(h["num_shards"]), int(h["shard_size"]),
+                int(h["num_nodes"]), z["shd/send_ids"],
+                z["shd/edge_upd"], z["shd/edge_dst"],
+                int(h["gather_block"]), z["shd/eui_padded"],
+                z["shd/piece_start"], z["shd/piece_end"],
+                z["shd/piece_dst"], int(h["wire_updates"]),
+                int(h["wire_edges"]))
+        return GraphPlan(cfg, n, m, part, graph_fp=meta.get("graph_fp"),
+                         **kw)
+
+
+# ---------------------------------------------------------------------------
+# Process-level plan cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PlanCacheStats:
+    plan_builds: int = 0
+    plan_hits: int = 0
+    png_builds: int = 0
+    png_hits: int = 0
+
+
+_PLAN_CACHE: dict[tuple, GraphPlan] = {}
+_PNG_CACHE: dict[tuple, PNGLayout] = {}
+_STATS = PlanCacheStats()
+
+# Bound on cached entries: a long-lived process streaming many graphs
+# through the (shim) constructors must not pin preprocessing arrays +
+# device uploads without limit.  Overflow evicts the oldest entry —
+# safe, because live engines/Sessions hold their own plan reference;
+# only a future cache hit is lost.  ``evict_plans(g)`` retires a
+# specific graph eagerly.
+MAX_CACHED_PLANS = 128
+MAX_CACHED_PNGS = 128
+
+
+def _bounded_insert(cache: dict, limit: int, key, value) -> None:
+    if key not in cache and len(cache) >= limit:
+        cache.pop(next(iter(cache)))       # least recently used
+    cache[key] = value
+
+
+def _touch(cache: dict, key) -> None:
+    """Refresh recency (dicts iterate in insertion order, so a hit
+    moves the entry to the back — a hot graph's plan is never the
+    one evicted by a stream of one-shot graphs)."""
+    cache[key] = cache.pop(key)
+
+
+def plan_cache_stats() -> PlanCacheStats:
+    """Live build/hit counters (tests assert build count == 1)."""
+    return _STATS
+
+
+def clear_plan_cache() -> None:
+    """Drop every cached plan and PNG layout and reset the counters."""
+    _PLAN_CACHE.clear()
+    _PNG_CACHE.clear()
+    _STATS.plan_builds = _STATS.plan_hits = 0
+    _STATS.png_builds = _STATS.png_hits = 0
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Content hash of the edge MULTISET — two equal graphs share
+    plans even when their COO edge lists arrive in different orders
+    (every backend lexsorts before building, so the plans are
+    identical).  Memoized on the instance (one lexsort + hash,
+    comparable to a single plan build)."""
+    fp = g.__dict__.get("_plan_fingerprint")
+    if fp is None:
+        order = np.lexsort((g.dst, g.src))
+        h = hashlib.sha1()
+        h.update(np.int64(g.num_nodes).tobytes())
+        h.update(np.ascontiguousarray(g.src[order]).tobytes())
+        h.update(np.ascontiguousarray(g.dst[order]).tobytes())
+        fp = h.hexdigest()
+        g.__dict__["_plan_fingerprint"] = fp   # frozen-safe: dict write
+    return fp
+
+
+def validate_plan(g: Graph, plan: GraphPlan) -> GraphPlan:
+    """Raise ``ValueError`` unless ``plan`` belongs to ``g`` (size and
+    content fingerprint) — shared guard of ``install_plan`` and
+    ``SpMVEngine(plan=...)``; a wrong plan must fail loudly, never
+    silently serve wrong preprocessing."""
+    if (plan.num_nodes, plan.num_edges) != (g.num_nodes, g.num_edges):
+        raise ValueError(
+            f"plan/graph mismatch: plan is for n={plan.num_nodes}, "
+            f"m={plan.num_edges}; graph has n={g.num_nodes}, "
+            f"m={g.num_edges}")
+    fp = graph_fingerprint(g)
+    if plan.graph_fp is not None and plan.graph_fp != fp:
+        raise ValueError(
+            "plan/graph mismatch: the plan was built from a graph "
+            "with a different edge set (content fingerprint "
+            f"{plan.graph_fp[:12]}… != {fp[:12]}…)")
+    return plan
+
+
+def shared_png(g: Graph, part_size: int) -> PNGLayout:
+    """The PNG layout for ``(graph, part_size)`` — method-independent,
+    so ``pcpm`` and ``pcpm_pallas`` plans share ONE build (the old
+    ``SpMVEngine`` built it once per constructor per method)."""
+    key = (graph_fingerprint(g), part_size)
+    png = _PNG_CACHE.get(key)
+    if png is not None:
+        _STATS.png_hits += 1
+        _touch(_PNG_CACHE, key)
+        return png
+    _STATS.png_builds += 1
+    png = build_png(g, Partitioning(g.num_nodes, part_size))
+    _bounded_insert(_PNG_CACHE, MAX_CACHED_PNGS, key, png)
+    return png
+
+
+def build_plan(g: Graph, config: PlanConfig | None = None) -> GraphPlan:
+    """THE way to get a plan: normalize the config, consult the
+    process-level cache, delegate a miss to the registered backend's
+    ``build_plan``."""
+    from .backends import get_backend, normalize_config
+    cfg = normalize_config(g, config or PlanConfig())
+    fp = graph_fingerprint(g)
+    key = (fp, cfg)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _STATS.plan_hits += 1
+        _touch(_PLAN_CACHE, key)
+        return plan
+    _STATS.plan_builds += 1
+    plan = get_backend(cfg.method).build_plan(g, cfg)
+    if plan.graph_fp is None:
+        plan = dataclasses.replace(plan, graph_fp=fp)
+    _bounded_insert(_PLAN_CACHE, MAX_CACHED_PLANS, key, plan)
+    return plan
+
+
+def install_plan(g: Graph, plan: GraphPlan) -> GraphPlan:
+    """Seed the cache with a plan built elsewhere (e.g. ``GraphPlan.
+    load`` of a persisted million-node plan) so every subsequent
+    ``build_plan``/``Session``/scheduler on ``g`` with the same config
+    warm-starts instead of re-sorting edges.
+
+    Raises ``ValueError`` when the plan does not belong to ``g`` (size
+    or content-fingerprint mismatch, see ``validate_plan``) — a wrong
+    plan would otherwise silently serve wrong preprocessing."""
+    from .backends import normalize_config
+    validate_plan(g, plan)
+    fp = graph_fingerprint(g)
+    cfg = normalize_config(g, plan.config)
+    if plan.graph_fp is None:
+        plan = dataclasses.replace(plan, graph_fp=fp)
+    _bounded_insert(_PLAN_CACHE, MAX_CACHED_PLANS, (fp, cfg), plan)
+    if plan.png is not None and (fp, cfg.part_size) not in _PNG_CACHE:
+        _bounded_insert(_PNG_CACHE, MAX_CACHED_PNGS,
+                        (fp, cfg.part_size), plan.png)
+    return plan
+
+
+def evict_plans(g: Graph) -> int:
+    """Drop every cached plan/PNG for ``g`` (a long-lived server that
+    rotates graphs uses this instead of the nuclear
+    ``clear_plan_cache``); live Sessions/engines keep their plan
+    references, only the cache entries — and with them the pinned
+    host + device memory once those references drop — are released.
+    Returns the number of entries evicted."""
+    fp = graph_fingerprint(g)
+    plan_keys = [k for k in _PLAN_CACHE if k[0] == fp]
+    png_keys = [k for k in _PNG_CACHE if k[0] == fp]
+    for k in plan_keys:
+        del _PLAN_CACHE[k]
+    for k in png_keys:
+        del _PNG_CACHE[k]
+    return len(plan_keys) + len(png_keys)

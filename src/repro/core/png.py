@@ -27,6 +27,12 @@ The MSB/branch-avoidance trick (paper §IV-C) is replaced by the explicit
 space (DESIGN.md §2).
 
 Compression ratio r = M / U is the paper's central statistic (table V).
+
+These layouts are plan-layer artifacts: ``core/plan.py`` caches one
+``PNGLayout`` per (graph, part_size) — shared by the ``pcpm`` and
+``pcpm_pallas`` backends — inside the process-cached, serializable
+``GraphPlan`` (DESIGN.md §8); call ``build_png`` directly only for
+one-off host-side analysis (benchmarks, tests).
 """
 from __future__ import annotations
 

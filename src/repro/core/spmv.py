@@ -29,7 +29,7 @@ import numpy as np
 
 from ..graphs.formats import Graph
 from .partition import Partitioning
-from .png import (GatherSchedule, PNGLayout, block_png, build_png,
+from .png import (GatherSchedule, PNGLayout, build_png,
                   build_gather_schedule)
 
 
@@ -204,108 +204,101 @@ def pcpm_spmv_weighted(png_update_src, png_edge_update_idx, png_edge_dst,
 # Engine wrapper with a uniform API
 # ---------------------------------------------------------------------------
 class SpMVEngine:
-    """y = A^T x with a fixed graph.
+    """y = A^T x with a fixed graph — a thin shim over the plan/run
+    split (DESIGN.md §8): construction resolves ``method`` through the
+    backend registry (``core.backends``) and fetches the preprocessing
+    artifact from the process-level plan cache (``core.plan``), so two
+    engines on the same ``(graph, config)`` share ONE ``GraphPlan``
+    (layouts sorted once, device streams uploaded once).
 
-    ``method`` in {pdpr, bvgas, pcpm, pcpm_pallas, pcpm_sharded}: the
-    three paper engines, the Pallas-kernel PCPM path (tiled one-hot
-    gather v2, interpret-mode fallback off-TPU — see kernels/pcpm_spmv),
-    and the multi-device all-to-all PCPM path (core/distributed.py;
-    vertex-sharded over ``num_shards`` devices, default all of them).
+    ``method`` is any registered backend — the built-ins are the three
+    paper engines (pdpr, bvgas, pcpm), the Pallas-kernel PCPM path
+    (pcpm_pallas) and the multi-device all-to-all PCPM path
+    (pcpm_sharded; vertex-sharded over ``num_shards`` devices, default
+    all of them).  A prebuilt/loaded ``plan`` overrides the knob
+    arguments.  New code should prefer ``repro.open`` (repro/api.py).
     """
 
     def __init__(self, g: Graph, *, method: str = "pcpm",
                  part_size: int = 65536, two_phase: bool = False,
-                 num_shards: int | None = None,
-                 shard_axis: str = "shards"):
-        self.method = method
-        self.num_nodes = g.num_nodes
-        self.num_edges = g.num_edges
-        self.two_phase = two_phase
-        part = Partitioning(g.num_nodes, part_size)
-        self.partitioning = part
-        self._fused_cache: dict = {}   # used by core.pagerank
-        if method == "pdpr":
-            self._csc = DeviceCSC.build(g)
-        elif method == "bvgas":
-            self._bv = DeviceBVGAS.build(g, part)
-        elif method == "pcpm":
-            self.layout = build_png(g, part)
-            self._png = DevicePNG.build(g, part, self.layout)
-        elif method == "pcpm_pallas":
-            from ..kernels.pcpm_spmv import pack_blocked
-            self.layout = build_png(g, part)
-            self._packed = pack_blocked(block_png(self.layout),
-                                        g.num_nodes)
-        elif method == "pcpm_sharded":
-            from jax.sharding import Mesh
-            from .distributed import (build_sharded_png,
-                                      pcpm_all_to_all_spmv)
-            avail = jax.device_count()
-            num_shards = num_shards or avail
-            if num_shards > avail:
-                raise ValueError(
-                    f"num_shards={num_shards} exceeds the "
-                    f"{avail} available devices")
-            self.shard_axis = shard_axis
-            self.mesh = Mesh(
-                np.array(jax.devices()[:num_shards]), (shard_axis,))
-            self.sharded_layout = build_sharded_png(g, num_shards)
-            self._sharded_spmv = pcpm_all_to_all_spmv(
-                self.sharded_layout, self.mesh, shard_axis)
+                 num_shards: int | None = None, plan=None):
+        from . import backends
+        from .plan import PlanConfig, build_plan, validate_plan
+        if plan is None:
+            plan = build_plan(g, PlanConfig(
+                method=method, part_size=part_size,
+                num_shards=num_shards))
         else:
-            raise ValueError(f"unknown method {method!r}")
+            validate_plan(g, plan)
+            if plan.sharded is not None:
+                backends.check_device_count(plan.sharded.num_shards)
+        self.plan = plan
+        self.method = plan.method
+        self.backend = backends.get_backend(plan.method)
+        if two_phase and not self.backend.supports_two_phase:
+            raise ValueError(
+                f"two_phase=True is only meaningful for the two-phase "
+                f"engines; backend {self.method!r} does not support it")
+        self.num_nodes = plan.num_nodes
+        self.num_edges = plan.num_edges
+        self.two_phase = two_phase
+        self.partitioning = plan.partitioning
+        # mesh axis name — the plan's (normalized) axis, so the fused
+        # drivers, serving paths and the spmv closure all share ONE
+        # mesh and one compiled all-to-all program
+        self.shard_axis = plan.config.shard_axis
+
+    # ------------------------------------------------------ plan views
+    @property
+    def layout(self) -> PNGLayout:
+        """The PNG layout (pcpm/pcpm_pallas plans)."""
+        if self.plan.png is None:
+            raise AttributeError(
+                f"backend {self.method!r} has no PNG layout")
+        return self.plan.png
+
+    @property
+    def sharded_layout(self):
+        if self.plan.sharded is None:
+            raise AttributeError(
+                f"backend {self.method!r} has no sharded layout")
+        return self.plan.sharded
+
+    @property
+    def mesh(self):
+        from . import backends
+        return backends.sharded_mesh(self.plan, self.shard_axis)
 
     @property
     def compression_ratio(self) -> float:
-        if self.method in ("pcpm", "pcpm_pallas"):
-            return self.layout.compression_ratio
-        if self.method == "pcpm_sharded":
-            return self.sharded_layout.wire_compression
-        return 1.0
+        return self.plan.compression_ratio
+
+    @property
+    def _fused_cache(self) -> dict:
+        # plan-level, so every engine/driver on one plan shares traces
+        from . import backends
+        return backends.fused_loop_cache(self.plan)
 
     def spmv_fn(self):
-        """A pure, traceable ``x -> A^T x`` closure over the device-
-        resident layout — what the fused `lax.while_loop` PageRank
-        driver and AOT compilation consume.  Ignores ``two_phase``
-        (a host-side timing barrier has no meaning under jit)."""
-        if self.method == "pdpr":
-            csc, n = self._csc, self.num_nodes
-            return lambda x: pdpr_spmv(csc.src, csc.dst, x, num_nodes=n)
-        if self.method == "bvgas":
-            bv, n = self._bv, self.num_nodes
-            return lambda x: bvgas_gather(bvgas_scatter(bv.src, x),
-                                          bv.dst, num_nodes=n)
-        if self.method == "pcpm_pallas":
-            from ..kernels.pcpm_spmv import pcpm_spmv_pallas
-            packed = self._packed
-            return lambda x: pcpm_spmv_pallas(packed, x)
-        if self.method == "pcpm_sharded":
-            spmv, n = self._sharded_spmv, self.num_nodes
-            n_pad = self.sharded_layout.padded_nodes
-
-            def fn(x):
-                width = ((0, n_pad - n),) + ((0, 0),) * (x.ndim - 1)
-                return spmv(jnp.pad(x, width))[:n]
-            return fn
-        png, n = self._png, self.num_nodes
-        return lambda x: pcpm_gather_blocked(
-            pcpm_scatter(png.update_src, x), png.eui_padded,
-            png.piece_start, png.piece_end, png.piece_dst,
-            num_nodes=n, block=png.gather_block)
+        """A pure, traceable ``x -> A^T x`` closure over the plan's
+        device-resident streams — what the fused `lax.while_loop`
+        PageRank driver and AOT compilation consume.  Raises for
+        ``two_phase`` engines rather than silently dropping the phase
+        barrier (a host-side barrier has no meaning under jit)."""
+        if self.two_phase:
+            raise ValueError(
+                "a two_phase engine cannot provide a fused spmv_fn: "
+                "the host-side phase barrier does not exist under jit."
+                " Construct the engine with two_phase=False for fused/"
+                "serving consumers.")
+        from . import backends
+        return backends.spmv_fn(self.plan)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        if self.method in ("pdpr", "pcpm_pallas", "pcpm_sharded"):
-            return self.spmv_fn()(x)
-        if self.method == "bvgas":
-            bins = bvgas_scatter(self._bv.src, x)
-            if self.two_phase:
-                bins = jax.block_until_ready(bins)
-            return bvgas_gather(bins, self._bv.dst,
-                                num_nodes=self.num_nodes)
-        bins = pcpm_scatter(self._png.update_src, x)
-        if self.two_phase:
-            bins = jax.block_until_ready(bins)
-        return pcpm_gather_blocked(
-            bins, self._png.eui_padded, self._png.piece_start,
-            self._png.piece_end, self._png.piece_dst,
-            num_nodes=self.num_nodes, block=self._png.gather_block)
+        from . import backends
+        if not self.two_phase:
+            return backends.spmv_fn(self.plan)(x)
+        # host barrier between scatter and gather: the backend's own
+        # two_phase_fn (bins round-trip through HBM exactly as the
+        # paper's bins round-trip through DRAM — timing fidelity)
+        return backends.two_phase_spmv_fn(self.plan)(x)

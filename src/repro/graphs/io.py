@@ -1,4 +1,11 @@
-"""Graph persistence (npz)."""
+"""Graph + plan persistence (npz).
+
+``save``/``load`` persist the raw edge set; ``load_plan`` reads back a
+preprocessing artifact persisted with ``GraphPlan.save`` (core/plan.py)
+so a server process warm-loads both the graph AND its sorted layouts —
+million-node plans come back as one ``.npz`` read instead of an edge
+re-sort (the paper's preprocess-once amortization, §VI-D3).
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -13,3 +20,10 @@ def save(path: str, g: Graph) -> None:
 def load(path: str) -> Graph:
     z = np.load(path)
     return Graph(int(z["num_nodes"]), z["src"], z["dst"])
+
+
+def load_plan(path: str):
+    """Load a persisted ``GraphPlan``; pair with
+    ``core.plan.install_plan`` to seed the process plan cache."""
+    from ..core.plan import GraphPlan
+    return GraphPlan.load(path)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import LMConfig
+from ..core.backends import resolve_engine
 from ..core.pagerank import _inv_degree, fused_power_iteration
 from ..core.spmv import SpMVEngine
 from ..graphs.formats import Graph
@@ -99,17 +100,11 @@ class PageRankServer:
         self.n = g.num_nodes
         self.batch = batch
         self.damping = damping
-        if sharded and method not in ("pcpm_sharded",):
-            method = "pcpm_sharded"
-        if sharded and engine is not None \
-                and engine.method != "pcpm_sharded":
-            raise ValueError(
-                "sharded=True requires a pcpm_sharded engine; got "
-                f"method={engine.method!r}")
-        self.engine = engine or SpMVEngine(g, method=method,
-                                           part_size=part_size,
-                                           num_shards=num_shards)
-        self.sharded = self.engine.method == "pcpm_sharded"
+        self.engine = resolve_engine(g, method=method, sharded=sharded,
+                                     part_size=part_size,
+                                     num_shards=num_shards,
+                                     engine=engine)
+        self.sharded = self.engine.backend.supports_sharding
         self.trace_count = 0
         self._uniform_cache = None
         multi = batch > 1

@@ -36,6 +36,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..core.backends import resolve_engine
+from ..core.plan import install_plan
 from ..core.pagerank import _inv_degree, masked_chunk_stepper
 from ..core.spmv import SpMVEngine
 from ..graphs.formats import Graph
@@ -95,17 +97,11 @@ class SlotScheduler:
         self.slots = slots
         self.damping = damping
         self.chunk = chunk
-        if sharded and method != "pcpm_sharded":
-            method = "pcpm_sharded"
-        if engine is not None and sharded \
-                and engine.method != "pcpm_sharded":
-            raise ValueError(
-                "sharded=True requires a pcpm_sharded engine; got "
-                f"method={engine.method!r}")
-        self.engine = engine or SpMVEngine(g, method=method,
-                                           part_size=part_size,
-                                           num_shards=num_shards)
-        self.sharded = self.engine.method == "pcpm_sharded"
+        self.engine = resolve_engine(g, method=method, sharded=sharded,
+                                     part_size=part_size,
+                                     num_shards=num_shards,
+                                     engine=engine)
+        self.sharded = self.engine.backend.supports_sharding
         self.metrics = metrics or ServeMetrics()
         self.trace_count = 0          # stepper traces — must stay 1
         self.admit_trace_count = 0    # column-admit traces — must stay 1
@@ -352,7 +348,12 @@ class GraphRegistry:
     Keyword defaults passed at construction apply to every graph;
     per-graph overrides win.  ``load`` warm-loads a persisted graph
     (graphs/io.py npz) and compiles its scheduler immediately, so the
-    first query pays zero trace/compile cost.
+    first query pays zero trace/compile cost.  Every scheduler
+    resolves its preprocessing through the process-level plan cache
+    (core/plan.py), so several schedulers over one graph share ONE
+    ``GraphPlan`` — and ``load(plan_path=...)`` seeds that cache from
+    a persisted plan so even the first build is a warm ``.npz`` read
+    instead of an edge sort.
     """
 
     def __init__(self, **defaults):
@@ -366,8 +367,17 @@ class GraphRegistry:
         self._schedulers[name] = SlotScheduler(g, **kw)
         return self._schedulers[name]
 
-    def load(self, name: str, path: str, **overrides) -> SlotScheduler:
-        return self.add(name, graph_io.load(path), **overrides)
+    def load(self, name: str, path: str, *,
+             plan_path: str | None = None, **overrides) -> SlotScheduler:
+        g = graph_io.load(path)
+        if plan_path is not None:
+            # validate + seed the process cache, then hand the
+            # scheduler an engine wrapping the loaded plan directly —
+            # the plan's full config (incl. gather_block) is honored,
+            # never reconstructed from registry defaults
+            plan = install_plan(g, graph_io.load_plan(plan_path))
+            overrides.setdefault("engine", SpMVEngine(g, plan=plan))
+        return self.add(name, g, **overrides)
 
     def get(self, name: str) -> SlotScheduler:
         try:

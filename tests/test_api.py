@@ -1,0 +1,251 @@
+"""Plan/Session split acceptance (ISSUE 4):
+
+- ``repro.open(g, cfg)`` serves pagerank(), spmv() and serve() from
+  ONE cached GraphPlan (build count == 1);
+- the backend registry resolves all five engines; a new backend plugs
+  in through ``register_backend`` without touching any call site;
+- the old entry points (SpMVEngine / pagerank() / PageRankServer /
+  SlotScheduler) are shims over the same plan cache — both paths give
+  identical results;
+- ``two_phase`` is honored or rejected, never silently ignored.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro
+from repro.core import (SpMVEngine, pagerank, pagerank_reference,
+                        resolve_method)
+from repro.core.backends import Backend, _REGISTRY
+from repro.core.plan import plan_cache_stats
+from repro.graphs import generators
+
+
+@pytest.fixture
+def graph():
+    return generators.rmat(7, 6, seed=9)
+
+
+def dense_spmv(g, x):
+    A = np.zeros((g.num_nodes, g.num_nodes))
+    np.add.at(A, (g.src, g.dst), 1.0)
+    return A.T @ x
+
+
+# ----------------------------------------------------------- the facade
+class TestSession:
+    def test_one_plan_serves_everything(self, graph):
+        """The acceptance invariant: pagerank + spmv + serve + server
+        + a reopened session all come from ONE plan build."""
+        cfg = repro.EngineConfig(method="pcpm", part_size=32,
+                                 num_iterations=15, slots=2, chunk=4)
+        before = plan_cache_stats().plan_builds
+        sess = repro.open(graph, cfg)
+
+        res = sess.pagerank()
+        ref = pagerank_reference(graph, num_iterations=15)
+        np.testing.assert_allclose(np.asarray(res.ranks), ref,
+                                   rtol=1e-3, atol=1e-7)
+
+        x = np.random.default_rng(0).random(
+            graph.num_nodes).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(sess.spmv(x)),
+                                   dense_spmv(graph, x), rtol=2e-4,
+                                   atol=1e-5)
+
+        sch = sess.serve()
+        assert sch.engine is sess.engine          # shared plan, shared
+        sch.submit(tol=0.0, max_iters=15)         # device streams
+        out = sch.run_until_drained()
+        np.testing.assert_allclose(out[0].ranks, ref, rtol=1e-3,
+                                   atol=1e-7)
+
+        srv = sess.server(num_iterations=15)
+        pr, it, _ = srv.query()
+        assert it == 15
+
+        sess2 = repro.open(graph, cfg)
+        assert sess2.plan is sess.plan
+        assert plan_cache_stats().plan_builds == before + 1
+
+    def test_overrides_and_defaults(self, graph):
+        sess = repro.open(graph, method="pcpm", part_size=32, tol=1e-6,
+                          num_iterations=100)
+        res = sess.pagerank()
+        assert res.iterations < 100 and res.residuals[-1] < 1e-6
+        res5 = sess.pagerank(num_iterations=5, tol=0.0)
+        assert res5.iterations == 5
+
+    def test_python_driver_override(self, graph):
+        sess = repro.open(graph, method="pcpm", part_size=32,
+                          num_iterations=10)
+        fused = sess.pagerank()
+        py = sess.pagerank(driver="python")
+        np.testing.assert_allclose(np.asarray(fused.ranks),
+                                   np.asarray(py.ranks), rtol=1e-5,
+                                   atol=1e-8)
+
+    def test_plan_save_exposed(self, graph, tmp_path):
+        sess = repro.open(graph, method="pcpm", part_size=32)
+        path = str(tmp_path / "g.plan.npz")
+        sess.plan.save(path)
+        loaded = repro.GraphPlan.load(path)
+        assert loaded.config == sess.plan.config
+
+    def test_session_rejects_two_phase(self, graph):
+        with pytest.raises(ValueError, match="two_phase"):
+            repro.open(graph, two_phase=True)
+
+
+# ----------------------------------------------------------- plan cache
+class TestPlanCache:
+    def test_shims_share_the_session_plan(self, graph):
+        """Old constructors and the facade resolve to the SAME plan."""
+        sess = repro.open(graph, method="pcpm", part_size=32)
+        eng = SpMVEngine(graph, method="pcpm", part_size=32)
+        assert eng.plan is sess.plan
+
+    def test_png_deduped_across_pcpm_and_pallas(self, graph):
+        """The old SpMVEngine built the identical PNG layout once per
+        method; the plan cache builds it once per (graph, part_size)."""
+        SpMVEngine(graph, method="pcpm", part_size=16)
+        stats = plan_cache_stats()
+        png_before = stats.png_builds
+        SpMVEngine(graph, method="pcpm_pallas", part_size=16)
+        assert stats.png_builds == png_before          # hit, not build
+        assert stats.png_hits > 0
+
+    def test_registry_schedulers_share_one_plan(self, graph):
+        """GraphRegistry / repeated SlotScheduler construction reuses
+        one plan per graph instead of rebuilding per scheduler."""
+        from repro.serve import SlotScheduler
+        a = SlotScheduler(graph, slots=2, method="pcpm", part_size=16)
+        builds = plan_cache_stats().plan_builds
+        b = SlotScheduler(graph, slots=4, method="pcpm", part_size=16)
+        assert plan_cache_stats().plan_builds == builds
+        assert a.engine.plan is b.engine.plan
+
+    def test_equal_graphs_share_plans(self, graph):
+        """The cache is content-addressed: a re-generated identical
+        graph hits the same plan."""
+        g2 = generators.rmat(7, 6, seed=9)
+        assert g2 is not graph
+        e1 = SpMVEngine(graph, method="pcpm", part_size=32)
+        e2 = SpMVEngine(g2, method="pcpm", part_size=32)
+        assert e1.plan is e2.plan
+
+
+# ------------------------------------------------------------- registry
+class TestRegistry:
+    def test_all_five_backends_registered(self):
+        assert set(repro.available_backends()) >= {
+            "pdpr", "bvgas", "pcpm", "pcpm_pallas", "pcpm_sharded"}
+
+    def test_unknown_method_rejected(self, graph):
+        with pytest.raises(ValueError, match="unknown method"):
+            SpMVEngine(graph, method="gespmm")
+
+    def test_capability_flags(self):
+        assert repro.get_backend("pcpm_sharded").supports_sharding
+        assert not repro.get_backend("pcpm").supports_sharding
+        assert repro.get_backend("pcpm").supports_two_phase
+        assert not repro.get_backend("pdpr").supports_two_phase
+        assert repro.get_backend("pcpm_pallas").multi_vector
+
+    def test_resolve_method_sharded_fallback(self):
+        assert resolve_method("pcpm", sharded=True) == "pcpm_sharded"
+        assert resolve_method("pcpm", sharded=False) == "pcpm"
+        assert resolve_method("pcpm_sharded",
+                              sharded=True) == "pcpm_sharded"
+
+    def test_new_backend_plugs_in_without_call_site_edits(self, graph):
+        """Register a toy engine and drive it through the UNCHANGED
+        SpMVEngine / pagerank() / Session call sites."""
+        pcpm = repro.get_backend("pcpm")
+        toy = Backend("toy_pcpm", pcpm.build_plan, pcpm.spmv_fn,
+                      phase_fns=pcpm.phase_fns)
+        repro.register_backend(toy)
+        try:
+            res = pagerank(graph, method="toy_pcpm", num_iterations=10,
+                           part_size=32)
+            ref = pagerank_reference(graph, num_iterations=10)
+            np.testing.assert_allclose(np.asarray(res.ranks), ref,
+                                       rtol=1e-3, atol=1e-7)
+            sess = repro.open(graph, method="toy_pcpm", part_size=32)
+            sch = sess.serve(slots=2)
+            sch.submit(tol=0.0, max_iters=10)
+            out = sch.run_until_drained()
+            np.testing.assert_allclose(out[0].ranks, ref, rtol=1e-3,
+                                       atol=1e-7)
+            with pytest.raises(ValueError, match="already registered"):
+                repro.register_backend(toy)
+        finally:
+            _REGISTRY.pop("toy_pcpm", None)
+
+
+# ------------------------------------------------------------ two_phase
+class TestTwoPhase:
+    def test_spmv_fn_raises_instead_of_ignoring(self, graph):
+        eng = SpMVEngine(graph, method="pcpm", part_size=32,
+                         two_phase=True)
+        with pytest.raises(ValueError, match="two_phase"):
+            eng.spmv_fn()
+
+    def test_two_phase_call_still_correct(self, graph):
+        x = np.random.default_rng(1).random(
+            graph.num_nodes).astype(np.float32)
+        for method in ("pcpm", "bvgas"):
+            eng = SpMVEngine(graph, method=method, part_size=32,
+                             two_phase=True)
+            np.testing.assert_allclose(np.asarray(eng(jnp.asarray(x))),
+                                       dense_spmv(graph, x), rtol=2e-4,
+                                       atol=1e-5)
+
+    def test_two_phase_rejected_for_fused_only_backends(self, graph):
+        for method in ("pdpr", "pcpm_pallas"):
+            with pytest.raises(ValueError, match="two_phase"):
+                SpMVEngine(graph, method=method, two_phase=True)
+
+    def test_two_phase_pagerank_uses_python_driver(self, graph):
+        eng = SpMVEngine(graph, method="pcpm", part_size=32,
+                         two_phase=True)
+        res = pagerank(graph, engine=eng, num_iterations=10)
+        ref = pagerank_reference(graph, num_iterations=10)
+        np.testing.assert_allclose(np.asarray(res.ranks), ref,
+                                   rtol=1e-3, atol=1e-7)
+
+
+# ----------------------------------------------------- deprecation shims
+class TestShims:
+    """The pre-split entry points keep their signatures and agree with
+    the Session path bit-for-bit (same plan, same closures)."""
+
+    def test_pagerank_shim_matches_session(self, graph):
+        old = pagerank(graph, method="pcpm", num_iterations=12,
+                       part_size=32)
+        new = repro.open(graph, method="pcpm", part_size=32,
+                         num_iterations=12).pagerank()
+        np.testing.assert_array_equal(np.asarray(old.ranks),
+                                      np.asarray(new.ranks))
+
+    def test_server_shim_matches_session(self, graph):
+        from repro.serve import PageRankServer
+        old = PageRankServer(graph, method="pcpm", part_size=32,
+                             num_iterations=10)
+        pr_old, it_old, _ = old.query()
+        sess = repro.open(graph, method="pcpm", part_size=32,
+                          num_iterations=10)
+        pr_new, it_new, _ = sess.server().query()
+        assert it_old == it_new
+        np.testing.assert_array_equal(np.asarray(pr_old),
+                                      np.asarray(pr_new))
+
+    def test_engine_attributes_preserved(self, graph):
+        eng = SpMVEngine(graph, method="pcpm", part_size=32)
+        assert eng.partitioning.part_size == 32
+        assert eng.layout.compression_ratio == eng.compression_ratio > 1
+        assert eng.num_nodes == graph.num_nodes
+        eng_p = SpMVEngine(graph, method="pdpr")
+        assert eng_p.compression_ratio == 1.0
+        with pytest.raises(AttributeError):
+            eng_p.layout
