@@ -24,7 +24,7 @@ def main(argv=None) -> int:
                     help="default: n/64 (paper-regime partition count)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
-                         "table7 dist e2e sharded serve")
+                         "table7 dist e2e sharded serve stream")
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="enable the sharded fused-loop comparison "
                          "with N shards (clamped to visible devices; "
@@ -56,7 +56,7 @@ def main(argv=None) -> int:
     from . import (table4_runtime, fig8_comm, table5_locality,
                    table6_comm_locality, fig12_partition_sweep,
                    table7_preproc, dist_wire, pagerank_e2e,
-                   sharded_loop, serve_load)
+                   sharded_loop, serve_load, stream_updates)
     jobs = {
         "table4": lambda: table4_runtime.run(
             datasets, part_size=args.part_size),
@@ -77,6 +77,8 @@ def main(argv=None) -> int:
             part_size=args.part_size),
         "serve": lambda: serve_load.run(
             datasets[:2], part_size=args.part_size),
+        "stream": lambda: stream_updates.run(
+            datasets[:1], part_size=args.part_size),
     }
     selected = args.only or [j for j in jobs
                              if j not in ("sharded", "serve")]
@@ -123,6 +125,37 @@ def main(argv=None) -> int:
                 "plan_frac": round(plan_us / max(plan_us + iter_us, 1e-9),
                                    4),
             }
+        # dynamic-graph update split (DESIGN.md §9): per delta size,
+        # warm = incremental patch + residual push vs cold = rebuild +
+        # full power iteration, from benchmarks/stream_updates.py rows
+        stream_tags = sorted({n.rsplit("/", 1)[0] for n, _, _ in out.rows
+                              if n.startswith("stream/")
+                              and n.endswith("/patch")})
+        if stream_tags:
+            by_name = {n: us for n, us, _ in out.rows}
+
+            def _entry(tag):
+                e = {"delta": tag.split("/", 2)[2],
+                     "graph": tag.split("/", 2)[1],
+                     "patch_us": round(by_name[f"{tag}/patch"], 1),
+                     "rebuild_us": round(by_name[f"{tag}/rebuild"], 1),
+                     "push_us": round(by_name[f"{tag}/push20"], 1),
+                     "recompute_us": round(
+                         by_name[f"{tag}/recompute20"], 1),
+                     "speedup": round(
+                         (by_name[f"{tag}/rebuild"]
+                          + by_name[f"{tag}/recompute20"])
+                         / max(by_name[f"{tag}/patch"]
+                               + by_name[f"{tag}/push20"], 1e-9), 2)}
+                if f"{tag}/push_tol" in by_name:
+                    e["speedup_tol"] = round(
+                        (by_name[f"{tag}/rebuild"]
+                         + by_name[f"{tag}/recompute_tol"])
+                        / max(by_name[f"{tag}/patch"]
+                              + by_name[f"{tag}/push_tol"], 1e-9), 2)
+                return e
+
+            doc["patch_vs_rebuild"] = [_entry(t) for t in stream_tags]
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {args.json}", flush=True)

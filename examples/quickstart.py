@@ -17,6 +17,12 @@ mixed queries — personalized seeds, per-request tolerances, on-device
 top-k — from the SAME plan.  The full multi-graph demo is
 examples/serve_pagerank.py.
 
+``--stream`` demos the dynamic-graph subsystem (DESIGN.md §9): edge
+batches stream into the session, each one patching the plan's dirty
+partitions in place of a full rebuild, and ``pagerank(warm=True)``
+repairs the previous ranks with a residual push seeded at the changed
+edges instead of re-iterating from scratch.
+
 Migration note (pre-Session API): the old entry points still work —
 
     eng = SpMVEngine(g, method="pcpm", part_size=p)   # old
@@ -58,6 +64,10 @@ def main():
                     help="also demo the continuous-batching query "
                          "scheduler (examples/serve_pagerank.py has "
                          "the full version)")
+    ap.add_argument("--stream", action="store_true",
+                    help="also demo streaming edge deltas: "
+                         "incremental plan patching + residual-push "
+                         "warm rank updates (DESIGN.md §9)")
     args = ap.parse_args()
 
     g = generators.rmat(args.scale, args.edge_factor, seed=7)
@@ -119,6 +129,41 @@ def main():
         s = sch.metrics.summary()
         print(f"serve: {s['qps']:.1f} qps, p50={s['p50_ms']:.1f}ms "
               f"(see examples/serve_pagerank.py)")
+
+    if args.stream:
+        import time as _t
+        rng = np.random.default_rng(1)
+        n, m = sess.graph.num_nodes, sess.graph.num_edges
+        base = sess.pagerank(tol=1e-6, num_iterations=300)
+        print(f"\nstream: solved cold in {base.iterations} iterations;"
+              " now inserting edge batches...")
+        for batch in range(3):
+            # new content arrives clustered: this batch's edges land
+            # in two destination partitions, so the plan patch splices
+            # 2/64 partitions and leaves the rest untouched
+            k = m // 1000
+            band = np.flatnonzero(sess.graph.dst
+                                  < 2 * part_size).astype(np.int64)
+            ridx = rng.choice(band, size=k, replace=False)
+            delta = repro.GraphDelta.of(
+                add=np.stack([rng.integers(0, n, k),
+                              rng.integers(0, 2 * part_size, k)],
+                             axis=1),
+                remove=np.stack([sess.graph.src[ridx],
+                                 sess.graph.dst[ridx]], axis=1))
+            patches0 = repro.plan_cache_stats().plan_patches
+            t0 = _t.perf_counter()
+            sess.apply_delta(delta)
+            res = sess.pagerank(warm=True, tol=1e-6,
+                                num_iterations=300)
+            res.ranks.block_until_ready()
+            dt = _t.perf_counter() - t0
+            patched = repro.plan_cache_stats().plan_patches > patches0
+            print(f"stream: batch {batch}: ±{k} edges -> plan "
+                  f"{'patched' if patched else 'rebuilt'}, "
+                  f"{res.iterations} push sweeps, warm update "
+                  f"{dt * 1e3:.0f} ms (vs {base.iterations}-iteration "
+                  "cold solve)")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,13 @@ converge at different times and the scheduler back-fills freed columns
 mid-flight), and on-device top-k queries that ship only k ids+scores
 to the host.  Prints the per-query results and the latency/throughput
 summary from serve/metrics.py.
+
+The finale is a LIVE GRAPH UPDATE (DESIGN.md §9): with queries still
+in flight, an edge batch lands on the kron graph —
+``scheduler.apply_delta`` patches the plan's dirty partitions, swaps
+the stepper (one re-lower; the admit/extract executables survive), and
+the in-flight columns keep iterating straight into the NEW graph's
+answers while fresh queries are admitted behind them.
 """
 import argparse
 import os
@@ -69,10 +76,29 @@ def main():
         else:
             reg.submit(name, top_k=10, tol=1e-4, max_iters=100)
 
+    # a delta lands mid-load: advance one chunk (queries now in
+    # flight), patch the kron scheduler, keep serving
+    sch = reg.get("kron")
+    sch.step()
+    inflight = sch.active_slots
+    k = max(4, kron.num_edges // 1000)
+    ridx = rng.choice(kron.num_edges, size=k, replace=False)
+    delta = repro.GraphDelta.of(
+        add=np.stack([rng.integers(0, kron.num_nodes, k),
+                      rng.integers(0, part_size, k)], axis=1),
+        remove=np.stack([kron.src[ridx], kron.dst[ridx]], axis=1))
+    sch.apply_delta(delta)
+    print(f"kron: applied ±{k}-edge delta with {inflight} queries "
+          f"in flight (rebinds={sch.rebind_count}, admit traces="
+          f"{sch.admit_trace_count})")
+
     out = reg.run_until_drained()
     for name, results in out.items():
         sch = reg.get(name)
-        assert sch.trace_count == 1     # zero retraces under load
+        # zero retraces under load; the delta costs exactly one
+        # stepper re-lower on the graph it touched
+        assert sch.trace_count == 1 + sch.rebind_count
+        assert sch.admit_trace_count == 1
         print(f"\n--- {name} (n={sch.n}) ---")
         for r in results:
             what = (f"top{len(r.top_ids)}: {r.top_ids[:4]}..."

@@ -17,10 +17,12 @@ from .core.backends import (Backend, available_backends, get_backend,
 from .core.plan import (GraphPlan, PlanConfig, build_plan,
                         clear_plan_cache, evict_plans, install_plan,
                         plan_cache_stats)
+from .stream import DynamicGraph, GraphDelta
 
 __all__ = [
     "EngineConfig", "Session", "open",
     "Backend", "available_backends", "get_backend", "register_backend",
     "GraphPlan", "PlanConfig", "build_plan", "clear_plan_cache",
     "evict_plans", "install_plan", "plan_cache_stats",
+    "DynamicGraph", "GraphDelta",
 ]

@@ -14,6 +14,17 @@ serves every workload from it:
     srv  = sess.server(batch=8)             # AOT lockstep batch server
     sess.plan.save("web.plan.npz")          # persist the preprocessing
 
+Dynamic graphs (DESIGN.md §9): a session is a live handle, not a
+snapshot —
+
+    sess.apply_delta(GraphDelta.insert(edges))   # incremental plan patch
+    res = sess.pagerank(warm=True)               # residual-push update
+
+``apply_delta`` patches the plan for the delta's dirty partitions only
+(stream/patch.py) and ``warm=True`` pushes the residual seeded at the
+changed edges' endpoints instead of re-running full power iteration
+(stream/incremental.py).
+
 The old entry points keep working as thin shims over the same plan
 cache and backend registry, so both paths stay test-covered.
 """
@@ -22,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
 import jax.numpy as jnp
 
 from .core.pagerank import PageRankResult, pagerank
@@ -90,22 +102,85 @@ class Session:
         self.config = cfg
         self.plan: GraphPlan = build_plan(g, cfg.plan_config())
         self.engine = SpMVEngine(g, plan=self.plan)
+        # warm-start state (DESIGN.md §9): the graph and ranks of the
+        # last solve, the L1 step-residual it achieved, and the
+        # concatenated deltas applied since
+        self._solved_graph = None
+        self._solved_ranks = None
+        self._solved_key = None            # (damping, dangling)
+        self._solved_res = np.inf
+        self._delta_acc = None
+
+    # ---------------------------------------------------------- deltas
+    def apply_delta(self, delta) -> "Session":
+        """Advance the session's graph by one edge-delta batch: the
+        plan is patched incrementally (dirty partitions only, full
+        rebuild past the dirtiness threshold — stream/patch.py) and
+        the engine rebound to it.  Accumulates warm-start state so a
+        following ``pagerank(warm=True)`` costs a residual push, not a
+        full power iteration.  Serving handles created before the
+        delta keep running on the old plan; call their
+        ``apply_delta``/construct new ones for the updated graph."""
+        from .stream.delta import apply_delta as apply_edges
+        from .stream.patch import patch_plan
+        g_new = apply_edges(self.graph, delta)
+        self.plan = patch_plan(self.plan, delta, g_new)
+        self.graph = g_new
+        self.engine = SpMVEngine(g_new, plan=self.plan)
+        if self._solved_graph is not None:
+            self._delta_acc = (delta if self._delta_acc is None
+                               else self._delta_acc + delta)
+        return self
 
     # ------------------------------------------------------------- run
     def spmv(self, x) -> jnp.ndarray:
         """One y = A^T x pass ((n,) or (n, d)) on the plan's backend."""
         return self.engine(jnp.asarray(x))
 
-    def pagerank(self, **overrides) -> PageRankResult:
+    def pagerank(self, *, warm: bool = False,
+                 **overrides) -> PageRankResult:
         """Run the fused power iteration with the session defaults;
         keyword overrides (num_iterations/tol/damping/check_every/
-        dangling/driver) apply per call."""
+        dangling/driver) apply per call.
+
+        ``warm=True`` after ``apply_delta`` patches the PREVIOUS
+        result through the residual-push driver (seeded only at the
+        changed edges' endpoints) instead of iterating from scratch.
+        The sparse seed is only exact when the stored ranks are a
+        converged fixed point of the old graph, so the warm path runs
+        iff the previous solve achieved an L1 step-residual <= this
+        call's ``tol`` (and damping/dangling match); otherwise it
+        falls back to a cold run rather than silently under-deliver
+        accuracy.  ``tol`` and ``num_iterations`` mean exactly what
+        they mean cold: same stopping rule, ``num_iterations`` bounds
+        the push sweeps.  Either way the result is stored as the next
+        warm-start point."""
         cfg = self.config
         kw = dict(num_iterations=cfg.num_iterations, damping=cfg.damping,
                   tol=cfg.tol, check_every=cfg.check_every,
                   dangling=cfg.dangling)
         kw.update(overrides)
-        return pagerank(self.graph, engine=self.engine, **kw)
+        key = (kw["damping"], kw["dangling"])
+        tol, budget = kw["tol"], kw["num_iterations"]
+        if warm and self._solved_ranks is not None \
+                and self._solved_key == key \
+                and 0.0 < tol and self._solved_res <= tol:
+            from .stream.delta import GraphDelta
+            from .stream.incremental import update_ranks
+            res = update_ranks(
+                self.plan, self._delta_acc or GraphDelta.of(),
+                self._solved_ranks, g_old=self._solved_graph,
+                g_new=self.graph, damping=kw["damping"],
+                dangling=kw["dangling"], tol=tol, max_push=budget)
+        else:
+            res = pagerank(self.graph, engine=self.engine, **kw)
+        achieved = (res.residuals or [np.inf])[-1]
+        self._solved_graph = self.graph
+        self._solved_ranks = res.ranks
+        self._solved_key = key
+        self._solved_res = float(achieved)
+        self._delta_acc = None
+        return res
 
     def serve(self, **overrides):
         """A continuous-batching ``SlotScheduler`` sharing this

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from ..graphs.formats import Graph
 from .partition import Partitioning
 from .plan import GraphPlan, PlanConfig, shared_png
-from .png import block_png, build_gather_schedule
+from .png import (GatherSchedule, block_png, build_gather_schedule,
+                  flat_gather_schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -55,10 +56,20 @@ class Backend:
     uses_gather_block: bool = False    # plan depends on cfg.gather_block
     phase_fns: Optional[
         Callable[[GraphPlan], tuple[Callable, Callable]]] = None
+    # incremental plan patching (stream/patch.py): rebuild only the
+    # partitions an edge delta touched and splice them into the old
+    # plan.  ``(plan, g_new, delta) -> GraphPlan`` — backends without
+    # it fall back to a full rebuild on every delta.
+    patch_plan: Optional[
+        Callable[[GraphPlan, Graph, "object"], GraphPlan]] = None
 
     @property
     def supports_two_phase(self) -> bool:
         return self.phase_fns is not None
+
+    @property
+    def supports_incremental(self) -> bool:
+        return self.patch_plan is not None
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -220,59 +231,98 @@ def _plan_fields(g: Graph, cfg: PlanConfig) -> dict:
                 partitioning=Partitioning(g.num_nodes, cfg.part_size))
 
 
+def pdpr_schedule(csc_src: np.ndarray, csc_dst: np.ndarray, *,
+                  num_nodes: int, block: int) -> GatherSchedule:
+    """Blocked-gather schedule over the pull-order edge stream: the
+    "update bins" are x itself, so the per-edge pointer stream is just
+    the dst-sorted source ids.  Gives pdpr the same hierarchical
+    segmented reduction as pcpm (DESIGN.md §3) — the engines now differ
+    only in what they stream, not in how they reduce, which is what
+    makes the table-4 comparison honest."""
+    eui, starts, ends, pdst = flat_gather_schedule(
+        csc_src, csc_dst, num_nodes=num_nodes, block=block)
+    return GatherSchedule(block, len(csc_dst), eui, starts, ends, pdst)
+
+
 def _build_pdpr(g: Graph, cfg: PlanConfig) -> GraphPlan:
     order = np.lexsort((g.src, g.dst))
-    return GraphPlan(csc_src=g.src[order], csc_dst=g.dst[order],
+    src, dst = g.src[order], g.dst[order]
+    return GraphPlan(csc_src=src, csc_dst=dst,
+                     schedule=pdpr_schedule(src, dst,
+                                            num_nodes=g.num_nodes,
+                                            block=cfg.gather_block),
                      **_plan_fields(g, cfg))
 
 
-def _pdpr_device(plan: GraphPlan):
-    dev = plan._device.get("pdpr")
+def _sched_device(plan: GraphPlan):
+    dev = plan._device.get("sched")
     if dev is None:
-        dev = (jnp.asarray(plan.csc_src), jnp.asarray(plan.csc_dst))
-        plan._device["pdpr"] = dev
+        s = plan.schedule
+        dev = (jnp.asarray(s.edge_update_idx_padded),
+               jnp.asarray(s.piece_start), jnp.asarray(s.piece_end),
+               jnp.asarray(s.piece_dst))
+        plan._device["sched"] = dev
     return dev
 
 
 def _spmv_pdpr(plan: GraphPlan):
-    from .spmv import pdpr_spmv
-    src, dst = _pdpr_device(plan)
-    n = plan.num_nodes
-    return lambda x: pdpr_spmv(src, dst, x, num_nodes=n)
+    from .spmv import pcpm_gather_blocked
+    eui, ps, pe, pd = _sched_device(plan)
+    n, blk = plan.num_nodes, plan.schedule.block
+    return lambda x: pcpm_gather_blocked(x, eui, ps, pe, pd,
+                                         num_nodes=n, block=blk)
 
 
 # ---------------------------------------------------------------------------
 # bvgas — Binning w/ Vertex-centric GAS (paper alg. 2)
 # ---------------------------------------------------------------------------
+def bvgas_schedule(bv_dst: np.ndarray, *, num_nodes: int,
+                   block: int) -> GatherSchedule:
+    """Blocked-gather schedule over the per-edge bins: the pointer
+    stream is the permutation putting the dst-partition-major bins in
+    destination order (bins are written in scatter order and read in
+    gather order, exactly the paper's bin round-trip)."""
+    gorder = np.argsort(bv_dst, kind="stable").astype(np.int32)
+    eui, starts, ends, pdst = flat_gather_schedule(
+        gorder, bv_dst[gorder], num_nodes=num_nodes, block=block)
+    return GatherSchedule(block, len(bv_dst), eui, starts, ends, pdst)
+
+
 def _build_bvgas(g: Graph, cfg: PlanConfig) -> GraphPlan:
     dstp = g.dst.astype(np.int64) // cfg.part_size
     order = np.lexsort((g.dst, g.src, dstp))
-    return GraphPlan(bv_src=g.src[order], bv_dst=g.dst[order],
+    dst = g.dst[order]
+    return GraphPlan(bv_src=g.src[order], bv_dst=dst,
+                     schedule=bvgas_schedule(dst, num_nodes=g.num_nodes,
+                                             block=cfg.gather_block),
                      **_plan_fields(g, cfg))
 
 
 def _bvgas_device(plan: GraphPlan):
     dev = plan._device.get("bvgas")
     if dev is None:
-        dev = (jnp.asarray(plan.bv_src), jnp.asarray(plan.bv_dst))
+        dev = jnp.asarray(plan.bv_src)
         plan._device["bvgas"] = dev
     return dev
 
 
 def _spmv_bvgas(plan: GraphPlan):
-    from .spmv import bvgas_gather, bvgas_scatter
-    src, dst = _bvgas_device(plan)
-    n = plan.num_nodes
-    return lambda x: bvgas_gather(bvgas_scatter(src, x), dst,
-                                  num_nodes=n)
+    from .spmv import bvgas_scatter, pcpm_gather_blocked
+    src = _bvgas_device(plan)
+    eui, ps, pe, pd = _sched_device(plan)
+    n, blk = plan.num_nodes, plan.schedule.block
+    return lambda x: pcpm_gather_blocked(
+        bvgas_scatter(src, x), eui, ps, pe, pd, num_nodes=n, block=blk)
 
 
 def _phases_bvgas(plan: GraphPlan):
-    from .spmv import bvgas_gather, bvgas_scatter
-    src, dst = _bvgas_device(plan)
-    n = plan.num_nodes
+    from .spmv import bvgas_scatter, pcpm_gather_blocked
+    src = _bvgas_device(plan)
+    eui, ps, pe, pd = _sched_device(plan)
+    n, blk = plan.num_nodes, plan.schedule.block
     return (lambda x: bvgas_scatter(src, x),
-            lambda bins: bvgas_gather(bins, dst, num_nodes=n))
+            lambda bins: pcpm_gather_blocked(bins, eui, ps, pe, pd,
+                                             num_nodes=n, block=blk))
 
 
 # ---------------------------------------------------------------------------
@@ -366,13 +416,44 @@ def _spmv_pcpm_sharded(plan: GraphPlan):
 
 
 # ---------------------------------------------------------------------------
+# Incremental patchers (stream/patch.py) — imported lazily: the stream
+# package imports this registry, so the hook bodies must not import it
+# at module load.
+# ---------------------------------------------------------------------------
+def _patch_pdpr(plan, g_new, delta):
+    from ..stream.patch import patch_pdpr_plan
+    return patch_pdpr_plan(plan, g_new, delta)
+
+
+def _patch_bvgas(plan, g_new, delta):
+    from ..stream.patch import patch_bvgas_plan
+    return patch_bvgas_plan(plan, g_new, delta)
+
+
+def _patch_pcpm(plan, g_new, delta):
+    from ..stream.patch import patch_pcpm_plan
+    return patch_pcpm_plan(plan, g_new, delta)
+
+
+def _patch_pcpm_pallas(plan, g_new, delta):
+    from ..stream.patch import patch_pcpm_pallas_plan
+    return patch_pcpm_pallas_plan(plan, g_new, delta)
+
+
+# ---------------------------------------------------------------------------
 for _backend in (
-    Backend("pdpr", _build_pdpr, _spmv_pdpr),
-    Backend("bvgas", _build_bvgas, _spmv_bvgas,
-            phase_fns=_phases_bvgas),
+    Backend("pdpr", _build_pdpr, _spmv_pdpr, uses_gather_block=True,
+            patch_plan=_patch_pdpr),
+    Backend("bvgas", _build_bvgas, _spmv_bvgas, uses_gather_block=True,
+            phase_fns=_phases_bvgas, patch_plan=_patch_bvgas),
     Backend("pcpm", _build_pcpm, _spmv_pcpm, uses_gather_block=True,
-            phase_fns=_phases_pcpm),
-    Backend("pcpm_pallas", _build_pcpm_pallas, _spmv_pcpm_pallas),
+            phase_fns=_phases_pcpm, patch_plan=_patch_pcpm),
+    Backend("pcpm_pallas", _build_pcpm_pallas, _spmv_pcpm_pallas,
+            patch_plan=_patch_pcpm_pallas),
+    # pcpm_sharded has no patcher: shard-local receive buffers and the
+    # all-to-all send schedule are global layouts (a delta anywhere can
+    # grow any shard's wire stream), so deltas fall back to a full
+    # rebuild — the residual-push warm start still applies.
     Backend("pcpm_sharded", _build_pcpm_sharded, _spmv_pcpm_sharded,
             supports_sharding=True, uses_gather_block=True),
 ):

@@ -28,7 +28,6 @@ module only owns the artifact, the cache and the serialization.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 from typing import Any, Optional
 
@@ -92,6 +91,10 @@ class GraphPlan:
     # install_plan refuse a plan/graph mismatch instead of silently
     # serving wrong preprocessing
     graph_fp: Optional[str] = None
+    # fingerprint of the graph this plan was PATCHED from (stream/
+    # patch.py): patched plans form a parent chain g0 -> g1 -> ... that
+    # ``evict_plans`` can release as one unit
+    parent_fp: Optional[str] = None
     _device: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------- views
@@ -126,11 +129,12 @@ class GraphPlan:
         """
         arrays: dict[str, np.ndarray] = {}
         meta: dict[str, Any] = {
-            "version": 1,
+            "version": 2,
             "config": dataclasses.asdict(self.config),
             "num_nodes": self.num_nodes,
             "num_edges": self.num_edges,
             "graph_fp": self.graph_fp,
+            "parent_fp": self.parent_fp,
         }
         for key in ("csc_src", "csc_dst", "bv_src", "bv_dst"):
             arr = getattr(self, key)
@@ -183,10 +187,10 @@ class GraphPlan:
                 f"{path!r} is not a GraphPlan file (no __meta__ entry "
                 "— a raw graph npz goes through graphs.io.load)")
         meta = json.loads(str(z["__meta__"]))
-        if meta.get("version") != 1:
+        if meta.get("version") not in (1, 2):
             raise ValueError(
                 f"unsupported plan format version {meta.get('version')!r}"
-                f" in {path!r} (this build reads version 1)")
+                f" in {path!r} (this build reads versions 1-2)")
         cfg = PlanConfig(**meta["config"])
         n, m = int(meta["num_nodes"]), int(meta["num_edges"])
         part = Partitioning(n, cfg.part_size)
@@ -223,8 +227,26 @@ class GraphPlan:
                 z["shd/piece_start"], z["shd/piece_end"],
                 z["shd/piece_dst"], int(h["wire_updates"]),
                 int(h["wire_edges"]))
-        return GraphPlan(cfg, n, m, part, graph_fp=meta.get("graph_fp"),
-                         **kw)
+        graph_fp = meta.get("graph_fp")
+        if meta["version"] < 2:
+            # v1 fingerprints are sha1-of-sorted-edges; current builds
+            # use the multiset hash — drop the stale fp (install_plan
+            # re-stamps it) rather than spuriously reject the plan
+            graph_fp = None
+        if "schedule" not in kw and cfg.method in ("pdpr", "bvgas"):
+            # version-1 files predate the baseline engines adopting the
+            # blocked gather; the schedule is a sort-free O(M) derive
+            # (pdpr) / one argsort (bvgas) from the stored streams
+            from .backends import bvgas_schedule, pdpr_schedule
+            if cfg.method == "pdpr":
+                kw["schedule"] = pdpr_schedule(
+                    kw["csc_src"], kw["csc_dst"], num_nodes=n,
+                    block=cfg.gather_block)
+            else:
+                kw["schedule"] = bvgas_schedule(
+                    kw["bv_dst"], num_nodes=n, block=cfg.gather_block)
+        return GraphPlan(cfg, n, m, part, graph_fp=graph_fp,
+                         parent_fp=meta.get("parent_fp"), **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +258,7 @@ class PlanCacheStats:
     plan_hits: int = 0
     png_builds: int = 0
     png_hits: int = 0
+    plan_patches: int = 0    # incremental patches (stream/patch.py)
 
 
 _PLAN_CACHE: dict[tuple, GraphPlan] = {}
@@ -276,23 +299,70 @@ def clear_plan_cache() -> None:
     _PNG_CACHE.clear()
     _STATS.plan_builds = _STATS.plan_hits = 0
     _STATS.png_builds = _STATS.png_hits = 0
+    _STATS.plan_patches = 0
+
+
+def peek_plan(fp: str, config: PlanConfig) -> Optional[GraphPlan]:
+    """Plan-cache lookup by fingerprint without building on miss (the
+    hit refreshes LRU recency and counts as a cache hit) — the public
+    seam the incremental patcher uses, so the cache's key/LRU/stats
+    policy stays in this module."""
+    plan = _PLAN_CACHE.get((fp, config))
+    if plan is not None:
+        _STATS.plan_hits += 1
+        _touch(_PLAN_CACHE, (fp, config))
+    return plan
+
+
+def peek_shared_png(fp: str, part_size: int) -> Optional[PNGLayout]:
+    """PNG-cache lookup by fingerprint without building on miss — the
+    incremental patcher (stream/patch.py) uses it so a pcpm patch and
+    a pcpm_pallas patch of the same delta share ONE spliced layout."""
+    png = _PNG_CACHE.get((fp, part_size))
+    if png is not None:
+        _STATS.png_hits += 1
+        _touch(_PNG_CACHE, (fp, part_size))
+    return png
+
+
+def _edge_hash64(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """splitmix64 of the packed (src, dst) pair, vectorized (uint64
+    arithmetic wraps, which is the point)."""
+    h = ((src.astype(np.uint64) << np.uint64(32))
+         | dst.astype(np.uint64))
+    h = (h ^ (h >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    h = (h ^ (h >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return h ^ (h >> np.uint64(31))
+
+
+def _fp_string(num_nodes: int, num_edges: int, parts) -> str:
+    return (f"{num_nodes:x}.{num_edges:x}."
+            f"{int(parts[0]):016x}{int(parts[1]):016x}")
 
 
 def graph_fingerprint(g: Graph) -> str:
     """Content hash of the edge MULTISET — two equal graphs share
     plans even when their COO edge lists arrive in different orders
     (every backend lexsorts before building, so the plans are
-    identical).  Memoized on the instance (one lexsort + hash,
-    comparable to a single plan build)."""
+    identical).
+
+    The hash is a commutative-invertible pair (sum, xor) over per-edge
+    splitmix64 values: order-independent WITHOUT sorting (one O(M)
+    vectorized pass, vs. the lexsort a content sort would cost), and
+    incrementally updatable — ``stream.apply_delta`` derives the new
+    graph's fingerprint from the old one in O(|delta|), so a delta
+    stream never re-hashes the full edge list.  Memoized on the
+    instance."""
     fp = g.__dict__.get("_plan_fingerprint")
     if fp is None:
-        order = np.lexsort((g.dst, g.src))
-        h = hashlib.sha1()
-        h.update(np.int64(g.num_nodes).tobytes())
-        h.update(np.ascontiguousarray(g.src[order]).tobytes())
-        h.update(np.ascontiguousarray(g.dst[order]).tobytes())
-        fp = h.hexdigest()
-        g.__dict__["_plan_fingerprint"] = fp   # frozen-safe: dict write
+        parts = g.__dict__.get("_fp_parts")
+        if parts is None:
+            h = _edge_hash64(g.src, g.dst)
+            parts = (int(h.sum(dtype=np.uint64)),
+                     int(np.bitwise_xor.reduce(h, initial=np.uint64(0))))
+            g.__dict__["_fp_parts"] = parts   # frozen-safe: dict write
+        fp = _fp_string(g.num_nodes, g.num_edges, parts)
+        g.__dict__["_plan_fingerprint"] = fp
     return fp
 
 
@@ -374,16 +444,42 @@ def install_plan(g: Graph, plan: GraphPlan) -> GraphPlan:
     return plan
 
 
-def evict_plans(g: Graph) -> int:
+def _chain_fingerprints(fp: str) -> set[str]:
+    """Every fingerprint connected to ``fp`` through cached plans'
+    ``parent_fp`` links (both directions, transitively).  A stream of
+    patched plans forms a chain g0 -> g1 -> ... gT; retiring any link
+    retires the whole chain — the intermediate graphs are gone, so
+    their plans can never be cache-hit again."""
+    fps = {fp}
+    changed = True
+    while changed:
+        changed = False
+        for plan in _PLAN_CACHE.values():
+            links = {f for f in (plan.graph_fp, plan.parent_fp)
+                     if f is not None}
+            if links & fps and not links <= fps:
+                fps |= links
+                changed = True
+    return fps
+
+
+def evict_plans(g: Graph, *, chain: bool = True) -> int:
     """Drop every cached plan/PNG for ``g`` (a long-lived server that
     rotates graphs uses this instead of the nuclear
     ``clear_plan_cache``); live Sessions/engines keep their plan
     references, only the cache entries — and with them the pinned
     host + device memory once those references drop — are released.
-    Returns the number of entries evicted."""
-    fp = graph_fingerprint(g)
-    plan_keys = [k for k in _PLAN_CACHE if k[0] == fp]
-    png_keys = [k for k in _PNG_CACHE if k[0] == fp]
+
+    ``chain=True`` (default) also releases every plan linked to ``g``
+    through ``parent_fp`` patch chains (stream/patch.py): evicting any
+    version of a dynamically-updated graph releases all its patched
+    ancestors/descendants, so a delta stream cannot pin memory through
+    stale intermediate versions.  Returns the number of entries
+    evicted."""
+    fps = ({graph_fingerprint(g)} if not chain
+           else _chain_fingerprints(graph_fingerprint(g)))
+    plan_keys = [k for k in _PLAN_CACHE if k[0] in fps]
+    png_keys = [k for k in _PNG_CACHE if k[0] in fps]
     for k in plan_keys:
         del _PLAN_CACHE[k]
     for k in png_keys:

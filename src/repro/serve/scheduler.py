@@ -97,6 +97,7 @@ class SlotScheduler:
         self.slots = slots
         self.damping = damping
         self.chunk = chunk
+        self.dangling = dangling
         self.engine = resolve_engine(g, method=method, sharded=sharded,
                                      part_size=part_size,
                                      num_shards=num_shards,
@@ -105,26 +106,19 @@ class SlotScheduler:
         self.metrics = metrics or ServeMetrics()
         self.trace_count = 0          # stepper traces — must stay 1
         self.admit_trace_count = 0    # column-admit traces — must stay 1
+        self.rebind_count = 0         # plan swaps (apply_delta)
 
         B = slots
         if self.sharded:
-            from ..core.distributed import sharded_chunk_stepper
             layout = self.engine.sharded_layout
             self._n_pad = layout.padded_nodes
-            step = sharded_chunk_stepper(layout, self.engine.mesh,
-                                         self.engine.shard_axis,
-                                         damping=damping, chunk=chunk,
-                                         dangling=dangling)
             (self._vec_sharding, self._state_sharding,
              self._rep_sharding) = _mesh_shardings(self.engine)
-            self._inv_deg = _sharded_inv_degree(g, self.engine,
-                                                self._vec_sharding)
             state_spec = jax.ShapeDtypeStruct(
                 (self._n_pad, B), jnp.float32,
                 sharding=self._state_sharding)
             seed_spec = jax.ShapeDtypeStruct(
                 (self._n_pad,), jnp.float32, sharding=self._vec_sharding)
-            inv_spec = seed_spec
             rep = self._rep_sharding
             act_spec = jax.ShapeDtypeStruct((B,), jnp.bool_, sharding=rep)
             tol_spec = jax.ShapeDtypeStruct((B,), jnp.float32,
@@ -135,28 +129,18 @@ class SlotScheduler:
                 jnp.zeros((self._n_pad, B), jnp.float32),
                 self._state_sharding)
         else:
-            step = masked_chunk_stepper(self.engine, damping=damping,
-                                        chunk=chunk, dangling=dangling)
             self._n_pad = self.n
             self._vec_sharding = self._state_sharding = None
-            self._inv_deg = _inv_degree(g)
             state_spec = jax.ShapeDtypeStruct((self.n, B), jnp.float32)
             seed_spec = jax.ShapeDtypeStruct((self.n,), jnp.float32)
-            inv_spec = seed_spec
             act_spec = jax.ShapeDtypeStruct((B,), jnp.bool_)
             tol_spec = jax.ShapeDtypeStruct((B,), jnp.float32)
             bud_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
             col_spec = jax.ShapeDtypeStruct((), jnp.int32)
             zeros = jnp.zeros((self.n, B), jnp.float32)
-
-        def counted_step(pr, base, active, tol_col, budget, inv_deg):
-            self.trace_count += 1     # increments only at trace time
-            return step.__wrapped__(pr, base, active, tol_col, budget,
-                                    inv_deg)
-
-        self._step_c = (jax.jit(counted_step, donate_argnums=(0,))
-                        .lower(state_spec, state_spec, act_spec,
-                               tol_spec, bud_spec, inv_spec).compile())
+        self._specs = (state_spec, act_spec, tol_spec, bud_spec,
+                       seed_spec)
+        self._compile_stepper()
 
         dmp = damping
 
@@ -200,6 +184,61 @@ class SlotScheduler:
         self._max_iters = np.zeros(B, dtype=np.int64)
         self._queue: list[Query] = []
         self.completed: list[QueryResult] = []
+
+    # ----------------------------------------------------- plan binding
+    def _compile_stepper(self) -> None:
+        """(Re)compile the chunk stepper against the CURRENT engine's
+        plan and refresh the inverse-degree vector.  Called once at
+        construction and once per ``apply_delta`` — the admit/extract/
+        top-k executables are shape-only and are NOT rebuilt."""
+        if self.sharded:
+            from ..core.distributed import sharded_chunk_stepper
+            step = sharded_chunk_stepper(
+                self.engine.sharded_layout, self.engine.mesh,
+                self.engine.shard_axis, damping=self.damping,
+                chunk=self.chunk, dangling=self.dangling)
+            self._inv_deg = _sharded_inv_degree(self.g, self.engine,
+                                                self._vec_sharding)
+        else:
+            step = masked_chunk_stepper(self.engine,
+                                        damping=self.damping,
+                                        chunk=self.chunk,
+                                        dangling=self.dangling)
+            self._inv_deg = _inv_degree(self.g)
+
+        def counted_step(pr, base, active, tol_col, budget, inv_deg):
+            self.trace_count += 1     # increments only at trace time
+            return step.__wrapped__(pr, base, active, tol_col, budget,
+                                    inv_deg)
+
+        state_spec, act_spec, tol_spec, bud_spec, inv_spec = self._specs
+        self._step_c = (jax.jit(counted_step, donate_argnums=(0,))
+                        .lower(state_spec, state_spec, act_spec,
+                               tol_spec, bud_spec, inv_spec).compile())
+
+    def apply_delta(self, delta, *, g_new: Graph | None = None) -> None:
+        """Swap the scheduler onto the delta-updated graph WITHOUT
+        dropping in-flight queries: the plan is patched incrementally
+        (stream/patch.py), only the stepper is re-lowered against the
+        new streams (their shapes changed — one compile, counted in
+        ``rebind_count``), and the (n, B) slot state carries over
+        as-is.  Active columns continue iterating under the new
+        operator — their current state is a warm start, so they
+        converge to the NEW graph's answer under their own tolerance;
+        the admit/extract/top-k executables are shape-stable and
+        survive untouched (``admit_trace_count`` stays 1).  Queued
+        queries simply get admitted against the new plan."""
+        from ..stream.delta import apply_delta as apply_edges
+        from ..stream.patch import patch_plan
+        if g_new is None:
+            g_new = apply_edges(self.g, delta)
+        # patch_plan falls back to a full rebuild for backends without
+        # a patcher (pcpm_sharded's all-to-all wire layout is global)
+        new_plan = patch_plan(self.engine.plan, delta, g_new)
+        self.g = g_new
+        self.engine = SpMVEngine(g_new, plan=new_plan)
+        self.rebind_count += 1
+        self._compile_stepper()
 
     # ------------------------------------------------------------ intake
     def submit(self, seeds: np.ndarray | None = None, *,

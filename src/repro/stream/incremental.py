@@ -1,0 +1,331 @@
+"""Residual-push incremental PageRank (DESIGN.md §9).
+
+PageRank is the solution of the linear system
+
+    pr = base + d · Op(pr),       Op(x) = Aᵀ D⁻¹ x  (+ sink term)
+
+so a converged vector for the OLD graph is an excellent approximation
+for the NEW one: define the residual
+
+    r₀ = F_new(pr_old) − pr_old = d · (Op_new − Op_old)(pr_old)
+
+and the exact new solution is  pr_old + Σ_k (d·Op_new)ᵏ r₀ .  Two
+properties make this the right warm start (arXiv:2302.03245,
+arXiv:2109.09527):
+
+- **Sparse seed.**  (Op_new − Op_old) is non-zero only in the operator
+  columns of sources whose out-edge set changed, so r₀ is computed
+  host-side from the CSR rows of the touched sources — O(changed
+  degree), never O(M).
+- **Geometric push.**  ‖d·Op(r)‖₁ ≤ d‖r‖₁ (out-going mass is split,
+  never amplified), so pushing the WHOLE residual each sweep — one
+  SpMV on the residual vector, the dense analogue of forward-push —
+  contracts ‖r‖₁ by ≥ d per sweep and the iteration count is
+  log(tol/‖r₀‖₁)/log(d), independent of graph size.  After a 0.1%
+  delta that is a handful of sweeps instead of a full power iteration.
+
+Mass invariant: every sweep moves ‖r‖₁ of mass from the residual into
+the ranks and re-emits at most d of it, so ``sum(pr) + sum(r)/(1-d)``
+is conserved along the push — the DESIGN.md §9 conservation argument
+and the bound behind ``tol``: stopping at ‖r‖₁ < tol leaves at most
+tol·d/(1−d) L1 error in the final ranks.  That stopping rule is the
+exact analogue of the fused driver's (its per-step L1 change IS the
+pushed residual), so ``tol`` means the same thing warm and cold.
+
+The push loop is ONE donated jitted ``lax.while_loop`` over the plan's
+``spmv_fn`` (same zero-host-transfer structure as the §4 fused driver,
+cached per plan in the fused-loop cache); when the seed is too heavy —
+a delta so large the geometric argument buys nothing — ``update_ranks``
+falls back to the §4 fused stepper itself, warm-started at ``prev_pr``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.backends import fused_loop_cache, spmv_fn
+from ..core.pagerank import (PageRankResult, _inv_degree,
+                             fused_power_iteration)
+from ..core.plan import GraphPlan, validate_plan
+from ..core.spmv import SpMVEngine
+from ..graphs.formats import Graph
+from .delta import GraphDelta, apply_delta, gather_ranges
+
+# Seeds heavier than this (L1) go to the dense fused warm start: the
+# push still converges, but at ~0.1 of total rank mass displaced the
+# sweep count approaches a full power iteration's and the fused loop's
+# tighter body wins.
+DENSE_FALLBACK_L1 = 0.1
+
+
+def seed_residual(g_old: Graph, g_new: Graph, delta: GraphDelta,
+                  prev_pr: np.ndarray, *, damping: float = 0.85,
+                  dangling: str = "none") -> np.ndarray:
+    """r₀ = d·(Op_new − Op_old)(prev), computed sparsely.
+
+    Only the operator columns of the delta's touched sources differ,
+    and the new out-neighbour multiset of a touched u is
+    ``N_old(u) − rem(u) + add(u)``, so with per-source weights
+    ``w = d·prev[u]/deg[u]``:
+
+        r₀ = Σ_{N_old(u)} (w_new − w_old)   over touched sources' CSR
+           + w_new at every added edge's destination
+           − w_new at every removed edge's destination
+
+    which needs the OLD graph's CSR only — O(changed degree + |delta|)
+    host work, no O(M) pass over the new graph.  (``delta`` may be a
+    plain concatenation of several batches: a removal matching an
+    earlier insertion cancels term-for-term.)  Accumulated f64,
+    returned f32.
+    """
+    if dangling not in ("none", "redistribute"):
+        raise ValueError(f"unknown dangling policy {dangling!r}")
+    n = g_new.num_nodes
+    prev = np.asarray(prev_pr, dtype=np.float64).reshape(n)
+    r = np.zeros(n, dtype=np.float64)
+    touched = np.asarray(delta.touched_sources(), dtype=np.int64)
+    if touched.size == 0:
+        return r.astype(np.float32)
+    deg_old = g_old.out_degree[touched]
+    deg_new = g_new.out_degree[touched]
+    pv = damping * prev[touched]
+    w_old = np.where(deg_old > 0, pv / np.maximum(deg_old, 1), 0.0)
+    w_new = np.where(deg_new > 0, pv / np.maximum(deg_new, 1), 0.0)
+    # over the old neighbour lists: weight change of surviving edges
+    offs, idx = g_old.csr
+    cnt = (offs[touched + 1] - offs[touched]).astype(np.int64)
+    targets = idx[gather_ranges(offs[touched], cnt)]
+    np.add.at(r, targets, np.repeat(w_new - w_old, cnt))
+    # inserted / removed edges carry the NEW weight of their source
+    # (touched is sorted-unique, so searchsorted is an exact lookup)
+    if delta.num_added:
+        pos = np.searchsorted(touched, delta.add_src)
+        np.add.at(r, delta.add_dst, w_new[pos])
+    if delta.num_removed:
+        pos = np.searchsorted(touched, delta.rem_src)
+        np.add.at(r, delta.rem_dst, -w_new[pos])
+    if dangling == "redistribute":
+        sink_shift = damping * (
+            prev[touched[(deg_new == 0) & (deg_old > 0)]].sum()
+            - prev[touched[(deg_old == 0) & (deg_new > 0)]].sum())
+        if sink_shift != 0.0:
+            r += sink_shift / n
+    return r.astype(np.float32)
+
+
+# residuals ring size; ``max_push`` is runtime data clamped to this,
+# so changing it (or tol) NEVER retraces the push loop
+MAX_PUSH_BUF = 400
+
+# shape buckets for the arg-passing pcpm push path: stream lengths are
+# rounded up with inert pads to a multiple of max(PUSH_PAD, ~3-6% of
+# the length), so consecutive small deltas (whose true lengths wobble
+# by O(|delta|)) land in the SAME bucket and reuse one compiled
+# executable — zero compile per delta.  A delta that outgrows its
+# bucket costs one retrace, nothing else.
+PUSH_PAD = 4096
+
+
+def _bucket(length: int, *, align: int = 1) -> int:
+    mult = max(PUSH_PAD, 1 << max(int(length).bit_length() - 5, 0))
+    tgt = -(-max(length, 1) // mult) * mult
+    return -(-tgt // align) * align
+
+
+def _pad_to(arr: np.ndarray, fill, *, align: int = 1) -> np.ndarray:
+    tgt = _bucket(len(arr), align=align)
+    if tgt == len(arr):
+        return arr
+    out = np.full(tgt, fill, dtype=arr.dtype)
+    out[:len(arr)] = arr
+    return out
+
+
+def _pcpm_push_streams(plan: GraphPlan):
+    """Bucket-padded device copies of the pcpm streams for the
+    arg-passing push loop (cached on the plan).
+
+    Pads are inert by the same sentinel scheme the gather schedule
+    already uses: pad pieces have start=end=0 and the ``num_nodes``
+    destination (their contribution lands in the dropped overflow
+    segment), pad pointer entries reference update 0 but belong to no
+    piece, pad updates are referenced by no edge."""
+    dev = plan._device.get("push_streams")
+    if dev is None:
+        s = plan.schedule
+        n = plan.num_nodes
+        blk = s.block
+        dev = (jnp.asarray(_pad_to(plan.png.update_src, 0)),
+               jnp.asarray(_pad_to(s.edge_update_idx_padded, 0,
+                                   align=blk)),
+               jnp.asarray(_pad_to(s.piece_start, 0)),
+               jnp.asarray(_pad_to(s.piece_end, 0)),
+               jnp.asarray(_pad_to(s.piece_dst, n)))
+        plan._device["push_streams"] = dev
+    return dev
+
+
+def _push_while(pr, r, inv_deg, tol, max_push, spmv, *, num_nodes: int,
+                damping: float, dangling: str):
+    """THE push loop body — single home of the stopping rule, residual
+    ring and dangling handling, shared by the arg-passing pcpm path
+    and the generic closure path (``spmv`` is any traceable
+    ``x -> AᵀD⁻¹-applied x``)."""
+    dang = (inv_deg == 0).astype(pr.dtype)
+    residuals0 = jnp.full((MAX_PUSH_BUF,), -1.0, dtype=jnp.float32)
+
+    def cond(state):
+        it, _, r, _ = state
+        return ((it < jnp.minimum(max_push, MAX_PUSH_BUF))
+                & (jnp.abs(r).sum() >= tol))
+
+    def body(state):
+        it, pr, r, residuals = state
+        residuals = residuals.at[it].set(jnp.abs(r).sum())
+        pr = pr + r
+        r_next = damping * spmv(r * inv_deg)
+        if dangling == "redistribute":
+            r_next = r_next + (r * dang).sum() * (damping / num_nodes)
+        return it + 1, pr, r_next, residuals
+
+    it, pr, r, residuals = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), pr, r, residuals0))
+    return pr, it, residuals, r
+
+
+@partial(jax.jit, donate_argnums=(0, 1),
+         static_argnames=("num_nodes", "block", "damping", "dangling"))
+def _pcpm_push(pr, r, inv_deg, tol, max_push, upd_src, eui, ps, pe, pd,
+               *, num_nodes: int, block: int, damping: float,
+               dangling: str):
+    """Module-level push loop with the streams as ARGUMENTS: the jit
+    cache keys on their (bucketed) shapes, not their contents, so a
+    stream of patched plans shares one compiled loop."""
+    from ..core.spmv import pcpm_gather_blocked
+
+    def spmv(x):
+        return pcpm_gather_blocked(x[upd_src], eui, ps, pe, pd,
+                                   num_nodes=num_nodes, block=block)
+
+    return _push_while(pr, r, inv_deg, tol, max_push, spmv,
+                       num_nodes=num_nodes, damping=damping,
+                       dangling=dangling)
+
+
+def residual_push_loop(plan: GraphPlan, *, damping: float = 0.85,
+                       dangling: str = "none"):
+    """The plan's jitted push loop: ``run(pr, r, inv_deg, tol,
+    max_push) -> (pr, sweeps, residuals, r_out)`` with ``pr`` and
+    ``r`` donated; ``residuals`` is a (MAX_PUSH_BUF,) device array of
+    the per-sweep pre-push ‖r‖₁ (−1.0 in unused slots) and ``r_out``
+    the remaining residual vector (its norm is < tol iff the loop
+    converged; ``update_ranks`` re-invokes with it when a budget
+    larger than MAX_PUSH_BUF has sweeps left).  ``tol``/``max_push``
+    are runtime data — one trace serves every tolerance.
+
+    pcpm plans route through the arg-passing ``_pcpm_push`` (compiled
+    once per shape bucket per process); other backends get a per-plan
+    closure loop over their ``spmv_fn`` (compiled once per plan)."""
+    if dangling not in ("none", "redistribute"):
+        raise ValueError(f"unknown dangling policy {dangling!r}")
+    key = ("push", damping, dangling)
+    cache = fused_loop_cache(plan)
+    cached = cache.get(key)
+    if cached is not None:
+        return cached
+
+    if plan.method == "pcpm":
+        streams = _pcpm_push_streams(plan)
+        n, blk = plan.num_nodes, plan.schedule.block
+
+        def run(pr, r, inv_deg, tol, max_push):
+            return _pcpm_push(pr, r, inv_deg,
+                              jnp.float32(tol), jnp.int32(max_push),
+                              *streams, num_nodes=n, block=blk,
+                              damping=damping, dangling=dangling)
+    else:
+        spmv = spmv_fn(plan)
+        n = plan.num_nodes
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def run(pr, r, inv_deg, tol, max_push):
+            return _push_while(pr, r, inv_deg, tol, max_push, spmv,
+                               num_nodes=n, damping=damping,
+                               dangling=dangling)
+
+    cache[key] = run
+    return run
+
+
+def update_ranks(plan: GraphPlan, delta: GraphDelta, prev_pr, *,
+                 g_old: Graph, g_new: Graph | None = None,
+                 damping: float = 0.85, dangling: str = "none",
+                 tol: float = 1e-8, max_push: int = 200,
+                 dense_threshold: float = DENSE_FALLBACK_L1
+                 ) -> PageRankResult:
+    """Patch ``prev_pr`` (converged ranks of ``g_old``) into the ranks
+    of ``g_new`` = ``g_old`` + ``delta``.
+
+    ``plan`` must already be the NEW graph's plan (see
+    ``stream.patch.patch_plan`` / ``Session.apply_delta``); ``delta``
+    may be a concatenation of several batches relative to ``g_old``
+    (``GraphDelta.__add__``).  ``tol`` is the L1 stopping residual —
+    the same per-step L1-change rule the fused cold driver uses, so
+    equal tolerances mean equal stopping accuracy warm and cold
+    (final L1 distance to the fixed point ≤ tol·d/(1−d) either way).
+    """
+    if g_new is None:
+        g_new = apply_delta(g_old, delta)
+    validate_plan(g_new, plan)
+
+    # one host fetch serves both the f64 seed accumulation and the
+    # fresh (donatable) f32 device copy
+    prev_host = np.asarray(prev_pr, dtype=np.float32)
+    r0 = seed_residual(g_old, g_new, delta, prev_host,
+                       damping=damping, dangling=dangling)
+    r1 = float(np.abs(r0, dtype=np.float64).sum())
+    prev = jnp.asarray(prev_host)
+    if r1 < tol:
+        # already inside the stopping rule; still fold the first-order
+        # correction in (free accuracy, one vector add)
+        ranks = prev + jnp.asarray(r0) if r1 > 0.0 else prev
+        return PageRankResult(ranks, 0, [r1])
+
+    if r1 > dense_threshold:
+        # delta too heavy for the geometric-push argument — run the §4
+        # fused driver, still warm-started at the previous ranks
+        eng = SpMVEngine(g_new, plan=plan)
+        run = fused_power_iteration(eng, damping=damping,
+                                    num_iterations=max_push, tol=tol,
+                                    check_every=1, dangling=dangling)
+        n = g_new.num_nodes
+        base = jnp.full((n,), (1.0 - damping) / n, dtype=jnp.float32)
+        pr, it, res = run(prev, _inv_degree(g_new), base)
+        res_host = np.asarray(res)[:int(it)]
+        return PageRankResult(pr, int(it),
+                              [float(x) for x in res_host if x >= 0.0])
+
+    run = residual_push_loop(plan, damping=damping, dangling=dangling)
+    pr, r_dev = prev, jnp.asarray(r0)
+    inv_deg = _inv_degree(g_new)
+    sweeps, remaining, res_list = 0, max_push, []
+    while True:
+        # the device loop holds a MAX_PUSH_BUF residual ring; larger
+        # budgets re-invoke it with the carried residual vector, so
+        # max_push means exactly what num_iterations means cold
+        pr, it, res, r_dev = run(pr, r_dev, inv_deg, tol,
+                                 min(remaining, MAX_PUSH_BUF))
+        it = int(it)
+        sweeps += it
+        remaining -= it
+        res_list += [float(x) for x in np.asarray(res)[:it]
+                     if x >= 0.0]
+        final = float(jnp.abs(r_dev).sum())
+        if final < tol or remaining <= 0 or it == 0:
+            break
+    # append the post-push norm so residuals[-1] reads like the cold
+    # driver's: < tol iff converged (not merely budget-exhausted)
+    return PageRankResult(pr, sweeps, res_list + [final])

@@ -192,7 +192,7 @@ class TestWarmStart:
     def test_irrelevant_gather_block_shares_plan(self, graph):
         """Backends that never consume gather_block normalize it out
         of the cache key — no duplicate builds for irrelevant knobs."""
-        for method in ("pdpr", "bvgas", "pcpm_pallas"):
+        for method in ("pcpm_pallas",):
             e1 = SpMVEngine(graph, method=method, part_size=32)
             builds = plan_cache_stats().plan_builds
             e2 = SpMVEngine(graph, plan=build_plan(
@@ -200,11 +200,16 @@ class TestWarmStart:
                                   gather_block=512)))
             assert plan_cache_stats().plan_builds == builds, method
             assert e1.plan is e2.plan
-        # ...but pcpm genuinely depends on it: distinct plans
-        p1 = build_plan(graph, PlanConfig(method="pcpm", part_size=32))
-        p2 = build_plan(graph, PlanConfig(method="pcpm", part_size=32,
-                                          gather_block=512))
-        assert p1 is not p2 and p2.schedule.block == 512
+        # ...but the blocked-gather engines genuinely depend on it:
+        # distinct plans per block (pdpr/bvgas joined pcpm when they
+        # adopted the hierarchical gather schedule)
+        for method in ("pdpr", "bvgas", "pcpm"):
+            p1 = build_plan(graph, PlanConfig(method=method,
+                                              part_size=32))
+            p2 = build_plan(graph, PlanConfig(method=method,
+                                              part_size=32,
+                                              gather_block=512))
+            assert p1 is not p2 and p2.schedule.block == 512
 
     def test_evict_plans_releases_cache_entries(self, graph):
         from repro.core.plan import evict_plans

@@ -1,0 +1,467 @@
+"""Dynamic-graph subsystem tests (DESIGN.md §9).
+
+- delta semantics: multiset removal, loud failure on missing edges,
+  incremental fingerprint == from-scratch fingerprint;
+- patch exactness: for every patchable backend, a spliced plan's
+  arrays equal a from-scratch build EXACTLY (np.array_equal), for
+  localized deltas (dirty-partition path) and scattered ones
+  (threshold fallback);
+- residual-push parity: ``update_ranks`` agrees with a cold full
+  recompute to <= 1e-6 L-inf for random insert+delete deltas including
+  dangling-node creation, under both dangling policies; mass is
+  conserved under "redistribute";
+- plan-cache hygiene: a stream of patched plans stays bounded by the
+  cache limit and ``evict_plans`` releases the whole parent chain;
+- the Session front door and the SlotScheduler rebind path.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import backends
+from repro.core import plan as plan_mod
+from repro.core.pagerank import pagerank, pagerank_reference
+from repro.core.plan import (PlanConfig, build_plan, clear_plan_cache,
+                             evict_plans, graph_fingerprint)
+from repro.core.spmv import SpMVEngine
+from repro.graphs import generators
+from repro.graphs.formats import Graph
+from repro.stream import (DynamicGraph, GraphDelta, apply_delta,
+                          patch_plan, update_ranks)
+
+PART = 128
+PATCHABLE = ("pcpm", "pcpm_pallas", "pdpr", "bvgas")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def _graph(scale=10, ef=8, seed=3):
+    return generators.rmat(scale, ef, seed=seed)
+
+
+def _random_delta(g, rng, *, n_add=40, n_rem=40, dst_parts=None):
+    """Random delta; ``dst_parts`` restricts destinations to the given
+    partitions (localized delta, the dirty-partition regime)."""
+    n, m = g.num_nodes, g.num_edges
+    if dst_parts is None:
+        rem_pool = np.arange(m)
+        add_dst = rng.integers(0, n, size=n_add)
+    else:
+        in_parts = np.isin(g.dst // PART, dst_parts)
+        rem_pool = np.flatnonzero(in_parts)
+        p = rng.choice(dst_parts, size=n_add)
+        add_dst = (p * PART + rng.integers(0, PART, size=n_add)).clip(
+            0, n - 1)
+    ridx = rng.choice(rem_pool, size=min(n_rem, len(rem_pool)),
+                      replace=False)
+    add = np.stack([rng.integers(0, n, size=n_add),
+                    add_dst], axis=1).astype(np.int32)
+    rem = np.stack([g.src[ridx], g.dst[ridx]], axis=1)
+    return GraphDelta.of(add=add, remove=rem)
+
+
+def _dangling_creation_delta(g, rng):
+    """Remove EVERY out-edge of a well-connected node (creates a new
+    dangling node) and insert edges out of a previously-dangling one."""
+    deg = g.out_degree
+    victim = int(np.argmax((deg > 0) & (deg < 8)))
+    mask = g.src == victim
+    rem = np.stack([g.src[mask], g.dst[mask]], axis=1)
+    dangling = np.flatnonzero(deg == 0)
+    add = np.empty((0, 2), dtype=np.int32)
+    if len(dangling):
+        u = int(dangling[0])
+        add = np.array([[u, (u + 1) % g.num_nodes],
+                        [u, (u + 7) % g.num_nodes]], dtype=np.int32)
+    return GraphDelta.of(add=add, remove=rem)
+
+
+# ---------------------------------------------------------------------------
+# Delta semantics
+# ---------------------------------------------------------------------------
+def test_apply_delta_multiset_and_errors():
+    g = Graph(4, np.array([0, 0, 1, 2], np.int32),
+              np.array([1, 1, 2, 3], np.int32))
+    # removing one copy of a multi-edge keeps the other
+    g2 = apply_delta(g, GraphDelta.remove([[0, 1]]))
+    assert g2.num_edges == 3
+    assert ((g2.src == 0) & (g2.dst == 1)).sum() == 1
+    # removing a non-existent edge fails loudly
+    with pytest.raises(ValueError, match="cannot remove"):
+        apply_delta(g, GraphDelta.remove([[3, 0]]))
+    with pytest.raises(ValueError, match="cannot remove"):
+        apply_delta(g, GraphDelta.remove([[0, 1], [0, 1], [0, 1]]))
+    # out-of-range endpoints fail loudly
+    with pytest.raises(ValueError, match="out of range"):
+        apply_delta(g, GraphDelta.insert([[0, 4]]))
+    # empty delta is a no-op
+    g3 = apply_delta(g, GraphDelta.of())
+    assert np.array_equal(g3.src, g.src)
+
+
+def test_incremental_fingerprint_matches_fresh():
+    rng = np.random.default_rng(0)
+    g = _graph()
+    graph_fingerprint(g)                       # memoize hash parts
+    delta = _random_delta(g, rng)
+    g2 = apply_delta(g, delta)
+    fresh = Graph(g2.num_nodes, g2.src.copy(), g2.dst.copy())
+    assert graph_fingerprint(g2) == graph_fingerprint(fresh)
+    assert graph_fingerprint(g2) != graph_fingerprint(g)
+    # permutation-invariance survives the incremental path
+    perm = rng.permutation(g2.num_edges)
+    shuf = Graph(g2.num_nodes, g2.src[perm], g2.dst[perm])
+    assert graph_fingerprint(shuf) == graph_fingerprint(g2)
+
+
+def test_dynamic_graph_tracks_dirtiness():
+    rng = np.random.default_rng(1)
+    g = _graph()
+    dyn = DynamicGraph(g)
+    d1 = _random_delta(g, rng, dst_parts=np.array([1, 2]))
+    dyn.apply(d1)
+    assert set(dyn.dirty_partitions(PART)) <= {1, 2}
+    assert dyn.version == 1 and dyn.base_graph is g
+    d2 = _random_delta(dyn.graph, rng, dst_parts=np.array([5]))
+    dyn.apply(d2)
+    assert set(dyn.dirty_partitions(PART)) <= {1, 2, 5}
+    assert len(dyn.touched_sources()) > 0
+    dyn.mark_clean()
+    assert dyn.dirty_partitions(PART).size == 0
+    assert dyn.base_graph is dyn.graph
+
+
+# ---------------------------------------------------------------------------
+# Patch exactness
+# ---------------------------------------------------------------------------
+def _assert_plans_equal(a, b, method):
+    for field in ("csc_src", "csc_dst", "bv_src", "bv_dst"):
+        x, y = getattr(a, field), getattr(b, field)
+        assert (x is None) == (y is None)
+        if x is not None:
+            assert np.array_equal(x, y), (method, field)
+    if a.png is not None:
+        for f in ("update_src", "update_offsets", "edge_update_idx",
+                  "edge_dst", "edge_offsets"):
+            assert np.array_equal(getattr(a.png, f),
+                                  getattr(b.png, f)), (method, f)
+    if a.schedule is not None:
+        for f in ("edge_update_idx_padded", "piece_start", "piece_end",
+                  "piece_dst"):
+            assert np.array_equal(getattr(a.schedule, f),
+                                  getattr(b.schedule, f)), (method, f)
+    if a.blocked is not None:
+        for f in ("update_src", "edge_update_local", "edge_dst_local"):
+            assert np.array_equal(getattr(a.blocked, f),
+                                  getattr(b.blocked, f)), (method, f)
+
+
+@pytest.mark.parametrize("method", PATCHABLE)
+@pytest.mark.parametrize("localized", [True, False])
+def test_patch_matches_scratch_build(method, localized):
+    rng = np.random.default_rng(7)
+    g = _graph()
+    cfg = PlanConfig(method=method, part_size=PART)
+    plan = build_plan(g, cfg)
+    dst_parts = np.array([0, 3]) if localized else None
+    delta = _random_delta(g, rng, dst_parts=dst_parts)
+    g2 = apply_delta(g, delta)
+    patched = patch_plan(plan, delta, g2)
+    scratch = backends.get_backend(method).build_plan(g2, cfg)
+    assert patched.num_edges == g2.num_edges
+    assert patched.graph_fp == graph_fingerprint(g2)
+    assert patched.parent_fp == graph_fingerprint(g)
+    _assert_plans_equal(patched, scratch, method)
+    if localized:
+        # the localized delta must exercise the splice, not the
+        # full-rebuild fallback
+        assert repro.plan_cache_stats().plan_patches >= 1
+
+
+@pytest.mark.parametrize("method", PATCHABLE)
+def test_patch_dangling_and_chain(method):
+    """Chained deltas (incl. dangling-node creation) stay exact."""
+    rng = np.random.default_rng(11)
+    g = _graph()
+    cfg = PlanConfig(method=method, part_size=PART)
+    plan = build_plan(g, cfg)
+    cur_g = g
+    for i in range(3):
+        delta = (_dangling_creation_delta(cur_g, rng) if i == 1
+                 else _random_delta(cur_g, rng,
+                                    dst_parts=np.array([i, i + 4])))
+        g2 = apply_delta(cur_g, delta)
+        plan = patch_plan(plan, delta, g2)
+        cur_g = g2
+    scratch = backends.get_backend(method).build_plan(cur_g, cfg)
+    _assert_plans_equal(plan, scratch, method)
+
+
+def test_patched_plan_spmv_agrees():
+    rng = np.random.default_rng(23)
+    g = _graph()
+    delta = _random_delta(g, rng, dst_parts=np.array([2]))
+    g2 = apply_delta(g, delta)
+    x = rng.random(g.num_nodes).astype(np.float32)
+    ys = {}
+    for method in PATCHABLE:
+        plan = build_plan(g, PlanConfig(method=method, part_size=PART))
+        patched = patch_plan(plan, delta, g2)
+        ys[method] = np.asarray(SpMVEngine(g2, plan=patched)(x))
+    for method in PATCHABLE[1:]:
+        # engines reduce in different orders; tolerance is f32 rounding
+        np.testing.assert_allclose(ys[method], ys["pcpm"], rtol=1e-5,
+                                   atol=2e-5)
+
+
+def test_png_shared_across_patched_pcpm_and_pallas():
+    rng = np.random.default_rng(29)
+    g = _graph()
+    p1 = build_plan(g, PlanConfig(method="pcpm", part_size=PART))
+    p2 = build_plan(g, PlanConfig(method="pcpm_pallas", part_size=PART))
+    assert p1.png is p2.png
+    delta = _random_delta(g, rng, dst_parts=np.array([1]))
+    g2 = apply_delta(g, delta)
+    q1 = patch_plan(p1, delta, g2)
+    q2 = patch_plan(p2, delta, g2)
+    assert q1.png is q2.png        # one spliced PNG serves both
+
+
+# ---------------------------------------------------------------------------
+# Residual-push parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dangling", ["none", "redistribute"])
+def test_update_ranks_matches_cold_recompute(dangling):
+    rng = np.random.default_rng(13)
+    g = _graph(scale=11)
+    plan = build_plan(g, PlanConfig(method="pcpm", part_size=PART))
+    eng = SpMVEngine(g, plan=plan)
+    prev = pagerank(g, engine=eng, num_iterations=400, tol=1e-10,
+                    dangling=dangling)
+    delta = _random_delta(g, rng, n_add=30, n_rem=30)
+    # fold in a dangling-node creation too
+    delta2 = _dangling_creation_delta(g, rng)
+    delta = GraphDelta.of(
+        add=np.stack([np.concatenate([delta.add_src, delta2.add_src]),
+                      np.concatenate([delta.add_dst, delta2.add_dst])],
+                     axis=1),
+        remove=np.stack(
+            [np.concatenate([delta.rem_src, delta2.rem_src]),
+             np.concatenate([delta.rem_dst, delta2.rem_dst])], axis=1))
+    g2 = apply_delta(g, delta)
+    patched = patch_plan(plan, delta, g2)
+    warm = update_ranks(patched, delta, prev.ranks, g_old=g, g_new=g2,
+                        damping=0.85, dangling=dangling, tol=1e-9)
+    cold = pagerank(g2, engine=SpMVEngine(g2, plan=patched),
+                    num_iterations=400, tol=1e-10, dangling=dangling)
+    err = np.abs(np.asarray(warm.ranks) - np.asarray(cold.ranks)).max()
+    assert err <= 1e-6, err
+    ref = pagerank_reference(g2, num_iterations=300, dangling=dangling)
+    assert np.abs(np.asarray(warm.ranks) - ref).max() <= 1e-5
+    if dangling == "redistribute":
+        # mass conservation: pr + push(residual) keeps total mass 1
+        assert abs(float(np.asarray(warm.ranks).sum()) - 1.0) < 1e-4
+
+
+def test_update_ranks_empty_delta_is_noop():
+    g = _graph()
+    plan = build_plan(g, PlanConfig(method="pcpm", part_size=PART))
+    prev = pagerank(g, engine=SpMVEngine(g, plan=plan),
+                    num_iterations=50)
+    res = update_ranks(plan, GraphDelta.of(), prev.ranks, g_old=g,
+                       g_new=g)
+    assert res.iterations == 0
+    np.testing.assert_array_equal(np.asarray(res.ranks),
+                                  np.asarray(prev.ranks))
+
+
+def test_update_ranks_dense_fallback():
+    """A delta heavy enough to displace > dense_threshold of the rank
+    mass goes through the fused warm start and still agrees."""
+    rng = np.random.default_rng(17)
+    g = _graph(scale=10)
+    n, m = g.num_nodes, g.num_edges
+    plan = build_plan(g, PlanConfig(method="pcpm", part_size=PART))
+    prev = pagerank(g, engine=SpMVEngine(g, plan=plan),
+                    num_iterations=400, tol=1e-10)
+    # rewire 30% of the edges
+    k = m // 3
+    ridx = rng.choice(m, size=k, replace=False)
+    delta = GraphDelta.of(
+        add=np.stack([rng.integers(0, n, k), rng.integers(0, n, k)],
+                     axis=1).astype(np.int32),
+        remove=np.stack([g.src[ridx], g.dst[ridx]], axis=1))
+    g2 = apply_delta(g, delta)
+    patched = patch_plan(plan, delta, g2)
+    warm = update_ranks(patched, delta, prev.ranks, g_old=g, g_new=g2,
+                        tol=1e-9, max_push=400)
+    cold = pagerank(g2, engine=SpMVEngine(g2, plan=patched),
+                    num_iterations=400, tol=1e-10)
+    err = np.abs(np.asarray(warm.ranks) - np.asarray(cold.ranks)).max()
+    assert err <= 1e-6, err
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache hygiene under a delta stream
+# ---------------------------------------------------------------------------
+def test_patch_stream_stays_bounded_and_chain_evicts():
+    rng = np.random.default_rng(19)
+    g = _graph()
+    cfg = PlanConfig(method="pcpm", part_size=PART)
+    plan = build_plan(g, cfg)
+    graphs = [g]
+    for i in range(6):
+        delta = _random_delta(graphs[-1], rng,
+                              dst_parts=np.array([i % 4]))
+        g2 = apply_delta(graphs[-1], delta)
+        plan = patch_plan(plan, delta, g2)
+        graphs.append(g2)
+        assert len(plan_mod._PLAN_CACHE) <= plan_mod.MAX_CACHED_PLANS
+    # the whole version chain is cached (7 graphs) ...
+    assert len(plan_mod._PLAN_CACHE) == 7
+    # ... and evicting ANY version releases the entire chain
+    evicted = evict_plans(graphs[3])
+    assert len(plan_mod._PLAN_CACHE) == 0
+    assert len(plan_mod._PNG_CACHE) == 0
+    assert evicted >= 7
+    # a g_new inconsistent with the delta is rejected, not patched
+    plan = build_plan(g, cfg)
+    d_real = _random_delta(g, rng, dst_parts=np.array([0]))
+    d_other = _random_delta(g, rng, dst_parts=np.array([0]))
+    with pytest.raises(ValueError, match="not g_old"):
+        patch_plan(plan, d_other, apply_delta(g, d_real))
+    patch_plan(plan, d_real, apply_delta(g, d_real))
+
+
+def test_patch_stream_respects_lru_cap(monkeypatch):
+    """A stream of patched plans longer than the cache bound cannot pin
+    unbounded memory."""
+    rng = np.random.default_rng(31)
+    monkeypatch.setattr(plan_mod, "MAX_CACHED_PLANS", 4)
+    monkeypatch.setattr(plan_mod, "MAX_CACHED_PNGS", 4)
+    g = _graph()
+    cfg = PlanConfig(method="pcpm", part_size=PART)
+    plan = build_plan(g, cfg)
+    cur = g
+    for i in range(10):
+        delta = _random_delta(cur, rng, dst_parts=np.array([i % 4]))
+        nxt = apply_delta(cur, delta)
+        plan = patch_plan(plan, delta, nxt)
+        cur = nxt
+        assert len(plan_mod._PLAN_CACHE) <= 4
+        assert len(plan_mod._PNG_CACHE) <= 4
+
+
+# ---------------------------------------------------------------------------
+# Capability flags
+# ---------------------------------------------------------------------------
+def test_supports_incremental_flags():
+    for method in PATCHABLE:
+        assert backends.get_backend(method).supports_incremental
+    assert not backends.get_backend("pcpm_sharded").supports_incremental
+
+
+def test_sharded_delta_falls_back_to_rebuild():
+    """patch_plan on a backend without a patcher still produces a
+    correct, chained, cached plan (full rebuild)."""
+    rng = np.random.default_rng(37)
+    g = _graph()
+    cfg = PlanConfig(method="pcpm_sharded", part_size=PART,
+                     num_shards=1)
+    plan = build_plan(g, cfg)
+    delta = _random_delta(g, rng, dst_parts=np.array([1]))
+    g2 = apply_delta(g, delta)
+    patched = patch_plan(plan, delta, g2)
+    assert patched.parent_fp == graph_fingerprint(g)
+    assert patched.graph_fp == graph_fingerprint(g2)
+    assert repro.plan_cache_stats().plan_patches == 0   # rebuilt
+
+
+# ---------------------------------------------------------------------------
+# Session front door
+# ---------------------------------------------------------------------------
+def test_session_apply_delta_warm_parity():
+    rng = np.random.default_rng(41)
+    g = _graph(scale=11)
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=PART))
+    # 1e-6 is the tightest tolerance the cold driver can VERIFY in
+    # f32 (its step-diff floor is ~2e-7); the warm gate requires the
+    # prior solve to have achieved the requested tol
+    sess.pagerank(num_iterations=400, tol=1e-6)
+    d1 = _random_delta(g, rng, dst_parts=np.array([2, 9]))
+    d2 = _random_delta(apply_delta(g, d1), rng,
+                       dst_parts=np.array([5]))
+    sess.apply_delta(d1)
+    sess.apply_delta(d2)          # two deltas accumulate
+    warm = sess.pagerank(warm=True, tol=1e-6, num_iterations=400)
+    cold = pagerank(sess.graph, engine=sess.engine,
+                    num_iterations=400, tol=1e-10)
+    err = np.abs(np.asarray(warm.ranks) - np.asarray(cold.ranks)).max()
+    assert err <= 1e-6, err
+    assert warm.iterations < 400       # genuinely incremental
+    assert repro.plan_cache_stats().plan_patches >= 2
+
+
+def test_session_warm_unconverged_prior_falls_back_cold():
+    """The sparse residual seed is only exact over a CONVERGED prior
+    solve — warm=True after a 20-iteration tol=0 run must not silently
+    deliver 1e-4-accurate ranks while reporting a 1e-8 residual."""
+    rng = np.random.default_rng(47)
+    g = _graph(scale=11)
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=PART))
+    sess.pagerank(num_iterations=20, tol=0.0)     # NOT converged
+    sess.apply_delta(_random_delta(g, rng, dst_parts=np.array([1])))
+    warm = sess.pagerank(warm=True, tol=1e-8, num_iterations=400)
+    cold = pagerank(sess.graph, engine=sess.engine,
+                    num_iterations=400, tol=1e-10)
+    err = np.abs(np.asarray(warm.ranks) - np.asarray(cold.ranks)).max()
+    assert err <= 1e-6, err       # fell back to an honest cold solve
+
+
+def test_session_warm_without_solve_falls_back_cold():
+    g = _graph()
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=PART,
+                                            num_iterations=30))
+    res = sess.pagerank(warm=True)     # no previous solve
+    ref = pagerank_reference(g, num_iterations=30)
+    assert np.abs(np.asarray(res.ranks) - ref).max() <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Serving across a delta
+# ---------------------------------------------------------------------------
+def test_scheduler_apply_delta_keeps_inflight_queries():
+    rng = np.random.default_rng(43)
+    g = _graph(scale=11)
+    n = g.num_nodes
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=PART))
+    sch = sess.serve(slots=2, chunk=4)
+    sch.submit(tol=1e-7, max_iters=500)                 # uniform
+    sch.submit(top_k=5, tol=1e-7, max_iters=500)        # top-k
+    sch.step()
+    assert sch.active_slots == 2
+    delta = _random_delta(g, rng, dst_parts=np.array([3]))
+    g2 = apply_delta(g, delta)
+    sch.apply_delta(delta, g_new=g2)
+    out = sch.run_until_drained()
+    assert len(out) == 2
+    # one stepper re-lower, zero admit retraces, state carried over
+    assert sch.trace_count == 2
+    assert sch.admit_trace_count == 1
+    assert sch.rebind_count == 1
+    uni = [r for r in out if r.top_ids is None][0]
+    ref = pagerank_reference(g2, num_iterations=300)
+    assert np.abs(uni.ranks - ref).max() <= 1e-5
+    # queries submitted after the delta reuse the same executables
+    sch.submit(tol=1e-6, max_iters=200)
+    sch.run_until_drained()
+    assert sch.trace_count == 2 and sch.admit_trace_count == 1
