@@ -108,11 +108,20 @@ def run(datasets: list[Dataset], *, slots: int = 4,
                 time.sleep(min(1e-3, arrivals[i] - now))
         assert sch.trace_count == 1, "scheduler retraced under load"
         s = sch.metrics.summary()
+        # honest load labeling: in saturation mode the achieved qps IS
+        # the capacity threshold, so record it as such; in rate mode,
+        # flag whether the server actually kept up with the offered
+        # load (saturated = it could not) instead of leaving the
+        # regime ambiguous
+        if rate_qps is None:
+            regime = f",mode=saturation,capacity_qps={s['qps']:.1f}"
+        else:
+            saturated = s["qps"] < 0.95 * rate_qps
+            regime = f",rate={rate_qps:g},saturated={saturated}"
         csv.add(f"serve/{ds.name}/load", s["p50_ms"] / 1e3,
                 f"qps={s['qps']:.1f},p99_ms={s['p99_ms']:.1f}"
                 f",mean_iters={s['mean_iterations']:.1f}"
-                f",n={s['count']}"
-                + (f",rate={rate_qps:g}" if rate_qps else ",saturation"))
+                f",n={s['count']}" + regime)
     return csv
 
 

@@ -1,0 +1,196 @@
+"""Overload benchmark for the resilience layer (DESIGN.md §10).
+
+Two measured phases per dataset:
+
+1. **Capacity probe** — the saturation mode of serve_load.py (whole
+   workload offered at t=0, unbounded queue): the achieved queries/sec
+   is the scheduler's capacity and becomes the saturation threshold
+   the overload phase is calibrated against.
+2. **Overload run** — an open-loop Poisson arrival stream at
+   ``--overload``x the measured capacity (default 2x) against a
+   scheduler with a bounded admission queue and a default deadline.
+   The point of the resilience layer is that this run DOESN'T collapse:
+   load past the bound is shed with explicit per-query rejections, and
+   the queries that ARE admitted still meet the deadline.
+
+Reported (and frozen as BENCH_overload.json by the CI reliability
+job): capacity_qps, offered_qps, the admitted/rejected/expired/
+degraded split, the max queue depth ever observed (must stay at the
+configured bound), p99 latency of admitted queries, and whether that
+p99 sat within the deadline.
+
+    PYTHONPATH=src python -m benchmarks.serve_overload --smoke \
+        --json BENCH_overload.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.reliability import ResilienceConfig
+from repro.serve import ServeMetrics, SlotScheduler
+from repro.graphs import generators
+from .common import Dataset, suite
+from .serve_load import _mixed_workload
+
+
+def _measure_capacity(ds: Dataset, *, slots: int, chunk: int,
+                      part_size: int, num_queries: int,
+                      max_iters: int, seed: int) -> float:
+    """Saturation probe: everything offered at t=0, measured qps is
+    the capacity (the threshold serve_load.py now records)."""
+    sch = SlotScheduler(ds.graph, slots=slots, method="pcpm",
+                        part_size=part_size, chunk=chunk,
+                        metrics=ServeMetrics())
+    for seeds, top_k, tol in _mixed_workload(ds.n, num_queries,
+                                             seed=seed):
+        sch.submit(seeds, top_k=top_k, tol=tol, max_iters=max_iters)
+    sch.run_until_drained()
+    qps = sch.metrics.summary()["qps"]
+    assert qps, "capacity probe served no queries"
+    return float(qps)
+
+
+def _overload_run(ds: Dataset, *, slots: int, chunk: int,
+                  part_size: int, num_queries: int, max_iters: int,
+                  offered_qps: float, max_queue: int,
+                  deadline_s: float, seed: int) -> dict:
+    """Open-loop Poisson arrivals at ``offered_qps`` against the
+    bounded, deadline-aware scheduler; every query reaches an explicit
+    terminal state (served / rejected / expired), none hang."""
+    res = ResilienceConfig(max_queue=max_queue,
+                           default_deadline_s=deadline_s)
+    sch = SlotScheduler(ds.graph, slots=slots, method="pcpm",
+                        part_size=part_size, chunk=chunk,
+                        metrics=ServeMetrics(), resilience=res)
+    workload = _mixed_workload(ds.n, num_queries, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / offered_qps,
+                                         num_queries))
+    t0 = time.perf_counter()
+    i = 0
+    max_depth = 0
+    while len(sch.completed) < num_queries:
+        now = time.perf_counter() - t0
+        while i < num_queries and arrivals[i] <= now:
+            seeds, top_k, tol = workload[i]
+            sch.submit(seeds, top_k=top_k, tol=tol,
+                       max_iters=max_iters)
+            i += 1
+        max_depth = max(max_depth, sch.queued)
+        if sch.queued or sch.active_slots:
+            sch.step()
+        elif i < num_queries:
+            time.sleep(min(1e-3, arrivals[i] - now))
+    assert sch.trace_count == 1, "scheduler retraced under overload"
+    assert max_depth <= max_queue, "queue depth exceeded the bound"
+
+    counters = sch.metrics.counters
+    served = [r for r in sch.completed if r.error is None]
+    p99_s = sch.metrics.percentile(99.0)
+    return {
+        "offered_qps": round(offered_qps, 1),
+        "deadline_s": deadline_s,
+        "max_queue": max_queue,
+        "submitted": num_queries,
+        "served": len(served),
+        "rejected": int(counters.get("rejected", 0)),
+        "expired": int(counters.get("expired", 0)),
+        "degraded": int(counters.get("degraded", 0)),
+        "deadline_hits": int(counters.get("deadline_hits", 0)),
+        "max_queue_depth": max_depth,
+        "p99_admitted_ms": (round(p99_s * 1e3, 1)
+                            if p99_s is not None else None),
+        "within_deadline": (p99_s is not None
+                            and p99_s <= deadline_s),
+    }
+
+
+def run(datasets: list[Dataset], *, slots: int, chunk: int,
+        part_size: int, num_queries: int, max_iters: int,
+        overload: float, max_queue: int, deadline_s: float,
+        seed: int = 0) -> list[dict]:
+    out = []
+    for ds in datasets:
+        capacity = _measure_capacity(
+            ds, slots=slots, chunk=chunk, part_size=part_size,
+            num_queries=num_queries, max_iters=max_iters, seed=seed)
+        row = _overload_run(
+            ds, slots=slots, chunk=chunk, part_size=part_size,
+            num_queries=num_queries, max_iters=max_iters,
+            offered_qps=overload * capacity, max_queue=max_queue,
+            deadline_s=deadline_s, seed=seed)
+        row = {"name": ds.name, "n": ds.n, "m": ds.m,
+               "capacity_qps": round(capacity, 1), **row}
+        out.append(row)
+        shed = row["rejected"] + row["expired"]
+        print(f"{ds.name}: capacity={row['capacity_qps']:.0f} qps, "
+              f"offered={row['offered_qps']:.0f} qps "
+              f"({overload:g}x) -> served {row['served']}, "
+              f"shed {shed} explicitly, depth<={row['max_queue_depth']}"
+              f", p99={row['p99_admitted_ms']}ms "
+              f"(within deadline: {row['within_deadline']})",
+              flush=True)
+        assert shed > 0, "overload run shed nothing at >=2x capacity"
+        assert row["within_deadline"], \
+            "p99 of admitted queries exceeded the deadline"
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--num-queries", type=int, default=80)
+    ap.add_argument("--overload", type=float, default=2.0,
+                    help="offered load as a multiple of measured "
+                         "capacity (default 2x)")
+    ap.add_argument("--max-queue", type=int, default=8)
+    ap.add_argument("--deadline", type=float, default=5.0,
+                    help="per-query deadline in seconds")
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--max-iters", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one small RMAT graph, B=4")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.json:
+        open(args.json, "a").close()
+
+    t0 = time.time()
+    if args.smoke:
+        g = generators.rmat(10, 8, seed=1)
+        datasets = [Dataset("rmat_smoke", g)]
+        part_size = 64
+        args.slots = 4
+    else:
+        datasets = suite(args.scale)[:2]
+        from .common import default_part_size
+        part_size = default_part_size(1 << args.scale)
+    rows = run(datasets, slots=args.slots, chunk=args.chunk,
+               part_size=part_size, num_queries=args.num_queries,
+               max_iters=args.max_iters, overload=args.overload,
+               max_queue=args.max_queue, deadline_s=args.deadline)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s, {len(rows)} datasets", flush=True)
+    if args.json:
+        doc = {
+            "smoke": args.smoke,
+            "slots": args.slots,
+            "num_queries": args.num_queries,
+            "overload_factor": args.overload,
+            "total_seconds": round(total_s, 1),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {args.json}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

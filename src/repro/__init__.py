@@ -17,6 +17,7 @@ from .core.backends import (Backend, available_backends, get_backend,
 from .core.plan import (GraphPlan, PlanConfig, build_plan,
                         clear_plan_cache, evict_plans, install_plan,
                         plan_cache_stats)
+from .reliability import ResilienceConfig, check_plan_integrity
 from .stream import DynamicGraph, GraphDelta
 
 __all__ = [
@@ -24,5 +25,6 @@ __all__ = [
     "Backend", "available_backends", "get_backend", "register_backend",
     "GraphPlan", "PlanConfig", "build_plan", "clear_plan_cache",
     "evict_plans", "install_plan", "plan_cache_stats",
+    "ResilienceConfig", "check_plan_integrity",
     "DynamicGraph", "GraphDelta",
 ]

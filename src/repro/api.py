@@ -100,6 +100,8 @@ class Session:
                 "two-phase SpMVEngine directly for phase timing.")
         self.graph = g
         self.config = cfg
+        # build_plan validates the graph at entry (crisp ValueError on
+        # out-of-range ids / bad dtypes, DESIGN.md §10)
         self.plan: GraphPlan = build_plan(g, cfg.plan_config())
         self.engine = SpMVEngine(g, plan=self.plan)
         # warm-start state (DESIGN.md §9): the graph and ranks of the
@@ -181,6 +183,70 @@ class Session:
         self._solved_res = float(achieved)
         self._delta_acc = None
         return res
+
+    # ----------------------------------------------------- checkpoints
+    def save_checkpoint(self, path: str) -> None:
+        """Persist the last solve as a fingerprint-stamped rank
+        checkpoint (reliability/snapshot.py) — what a restarted
+        process hands to ``load_checkpoint`` to warm-start instead of
+        recomputing.  Requires a prior ``pagerank()`` on this
+        session."""
+        if self._solved_ranks is None:
+            raise ValueError("nothing to checkpoint: run pagerank() "
+                             "first")
+        from .reliability.snapshot import save_rank_checkpoint
+        save_rank_checkpoint(
+            path, self._solved_graph, np.asarray(self._solved_ranks),
+            residual=self._solved_res, damping=self._solved_key[0],
+            dangling=self._solved_key[1])
+
+    def load_checkpoint(self, path: str, *, g_old: Graph | None = None,
+                        delta=None) -> "Session":
+        """Warm-start this session from a rank checkpoint.
+
+        - Checkpoint fingerprint == this session's graph: the ranks
+          become the warm state directly — the next
+          ``pagerank(warm=True)`` is (near-)free.
+        - Checkpoint taken on ``g_old`` with ``delta`` applied since
+          (the restart-across-a-delta-chain case): pass both.  The
+          lineage is PROVEN by fingerprints — ``g_old`` must hash to
+          the checkpoint's fingerprint and ``g_old + delta`` to this
+          session's graph — then ``pagerank(warm=True)`` routes
+          through the residual-push updater (stream/incremental.py)
+          instead of a cold solve.
+        - Anything else: crisp ``ValueError``; a checkpoint for the
+          wrong graph must never silently seed answers."""
+        from .core.plan import graph_fingerprint
+        from .reliability.snapshot import load_rank_checkpoint
+        ckpt = load_rank_checkpoint(path)
+        fp_here = graph_fingerprint(self.graph)
+        if ckpt.graph_fp == fp_here:
+            self._solved_graph = self.graph
+            self._delta_acc = None
+        elif g_old is not None and delta is not None:
+            from .stream.delta import shifted_fingerprint
+            if graph_fingerprint(g_old) != ckpt.graph_fp:
+                raise ValueError(
+                    "checkpoint mismatch: g_old does not hash to the "
+                    "checkpoint's graph fingerprint "
+                    f"({ckpt.graph_fp[:12]}…)")
+            if shifted_fingerprint(ckpt.graph_fp, delta) != fp_here:
+                raise ValueError(
+                    "checkpoint mismatch: g_old + delta is not this "
+                    "session's graph (shifted fingerprint differs) — "
+                    "the delta chain does not connect the checkpoint "
+                    "to the current graph")
+            self._solved_graph = g_old
+            self._delta_acc = delta
+        else:
+            raise ValueError(
+                "checkpoint is for a different graph (fingerprint "
+                f"{ckpt.graph_fp[:12]}… != {fp_here[:12]}…); pass "
+                "g_old= and delta= to warm-start across a delta chain")
+        self._solved_ranks = jnp.asarray(ckpt.ranks)
+        self._solved_key = (ckpt.damping, ckpt.dangling)
+        self._solved_res = float(ckpt.residual)
+        return self
 
     def serve(self, **overrides):
         """A continuous-batching ``SlotScheduler`` sharing this

@@ -477,7 +477,10 @@ def sharded_chunk_stepper(layout: ShardedPNG, mesh: Mesh, axis: str, *,
             pr = jnp.where(act[None, :], pr_next, pr)
             res = jnp.where(act, r, res)
             took = took + act.astype(jnp.int32)
-            act = act & (r >= tol_col) & (took < budget)
+            # quarantine guardrail (DESIGN.md §10): the psum residual
+            # is replicated, so every shard freezes a NaN/Inf-poisoned
+            # column on the same iteration — no extra collective
+            act = act & jnp.isfinite(r) & (r >= tol_col) & (took < budget)
             return i + 1, pr, act, took, res
 
         _, pr, active, took, res = jax.lax.while_loop(

@@ -189,7 +189,13 @@ def masked_chunk_stepper(engine: SpMVEngine, *, damping: float = 0.85,
             pr = jnp.where(act[None, :], pr_next, pr)     # freeze others
             res = jnp.where(act, r, res)
             took = took + act.astype(jnp.int32)
-            act = act & (r >= tol_col) & (took < budget)
+            # quarantine guardrail (DESIGN.md §10): a non-finite L1
+            # residual means the column is NaN/Inf-poisoned — freeze it
+            # immediately (NaN already compares False below, but +Inf
+            # would keep burning budget) so the host sees the non-
+            # finite residual and quarantines the slot.  Folded into
+            # the existing reduction: no extra device sync.
+            act = act & jnp.isfinite(r) & (r >= tol_col) & (took < budget)
             return i + 1, pr, act, took, res
 
         _, pr, active, took, res = jax.lax.while_loop(

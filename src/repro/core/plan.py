@@ -406,7 +406,9 @@ def build_plan(g: Graph, config: PlanConfig | None = None) -> GraphPlan:
     process-level cache, delegate a miss to the registered backend's
     ``build_plan``."""
     from .backends import get_backend, normalize_config
-    cfg = normalize_config(g, config or PlanConfig())
+    from ..graphs.formats import validate_graph
+    validate_graph(g)     # crisp ValueError on out-of-range ids, not
+    cfg = normalize_config(g, config or PlanConfig())  # an index crash
     fp = graph_fingerprint(g)
     key = (fp, cfg)
     plan = _PLAN_CACHE.get(key)

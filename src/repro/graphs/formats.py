@@ -29,8 +29,23 @@ class Graph:
     dst: np.ndarray
 
     def __post_init__(self):
-        assert self.src.dtype == np.int32 and self.dst.dtype == np.int32
-        assert self.src.shape == self.dst.shape
+        for name, arr in (("src", self.src), ("dst", self.dst)):
+            if not isinstance(arr, np.ndarray) or arr.dtype != np.int32:
+                raise ValueError(
+                    f"Graph.{name} must be an int32 numpy array; got "
+                    f"{getattr(arr, 'dtype', type(arr).__name__)} "
+                    "(float/int64 edge arrays must be converted "
+                    "explicitly — silent truncation hides bad ids)")
+            if arr.ndim != 1:
+                raise ValueError(f"Graph.{name} must be 1-D (one entry "
+                                 f"per edge); got shape {arr.shape}")
+        if self.src.shape != self.dst.shape:
+            raise ValueError(
+                f"Graph src/dst must have equal length; got "
+                f"{self.src.shape[0]} vs {self.dst.shape[0]}")
+        if int(self.num_nodes) < 1:
+            raise ValueError(
+                f"Graph needs num_nodes >= 1; got {self.num_nodes}")
 
     @property
     def num_edges(self) -> int:
@@ -80,8 +95,37 @@ class Graph:
         return Graph(self.num_nodes, self.dst, self.src)
 
 
+def validate_graph(g: Graph) -> Graph:
+    """Front-door id-range check (DESIGN.md §10): every edge endpoint
+    must lie in ``[0, num_nodes)``.  Out-of-range ids otherwise
+    surface as obscure index errors (or, worse, silent wraparound)
+    deep inside partitioning — O(m) on first call, memoized on the
+    instance so every front door (``build_plan``, ``Session``,
+    ``SlotScheduler``) can call it for free afterwards."""
+    if g.__dict__.get("_validated"):
+        return g
+    for name, arr in (("src", g.src), ("dst", g.dst)):
+        if arr.size:
+            lo, hi = int(arr.min()), int(arr.max())
+            if lo < 0 or hi >= g.num_nodes:
+                raise ValueError(
+                    f"graph {name} ids span [{lo}, {hi}], outside "
+                    f"[0, {g.num_nodes}) — negative or out-of-range "
+                    "node ids")
+    g.__dict__["_validated"] = True   # frozen-safe: dict write
+    return g
+
+
 def from_edge_list(num_nodes: int, edges: np.ndarray) -> Graph:
     """edges: (m, 2) array of (src, dst)."""
-    e = np.asarray(edges, dtype=np.int32)
+    e = np.asarray(edges)
+    if e.size and e.dtype.kind not in "iu":
+        raise ValueError(
+            f"edge list must be integer-typed; got dtype {e.dtype} "
+            "(converting floats would silently truncate node ids)")
+    e = e.astype(np.int32, copy=False)
+    if e.ndim != 2 or e.shape[1] != 2:
+        raise ValueError(f"edges must be (m, 2) (src, dst) pairs; got "
+                         f"shape {e.shape}")
     return Graph(num_nodes, np.ascontiguousarray(e[:, 0]),
                  np.ascontiguousarray(e[:, 1]))

@@ -1,0 +1,37 @@
+"""Serving resilience layer (DESIGN.md §10).
+
+The serve path (serve/scheduler.py) is built for the happy path: every
+query converges, every rank stays finite, every delta patches cleanly
+and the process never dies.  This package adds the failure model:
+
+- ``admission``: the ``ResilienceConfig`` knob set — bounded admission
+  queue, deadlines/priorities, tolerance degradation under SLO
+  pressure, quarantine/retry policy.
+- ``faults``: a deterministic, seedable fault plan (NaN/Inf poisoning
+  of slot columns, device-step exceptions, failing deltas, corrupted
+  plan arrays) threaded through the scheduler via a test-only hook —
+  what the chaos suite drives.
+- ``guardrails``: host-side structural integrity checks over a
+  ``GraphPlan``'s index arrays — a corrupted plan fails loudly at
+  rebind instead of silently serving wrong preprocessing.
+- ``snapshot``: crash-safe recovery — scheduler snapshot/restore
+  (in-flight query specs + slot rank columns) and rank-vector
+  checkpoints keyed by the plan content fingerprint (core/plan.py), so
+  a restarted process warm-starts instead of recomputing, including
+  across a ``GraphDelta`` chain via ``stream/incremental``.
+"""
+from .admission import ResilienceConfig
+from .faults import (FaultInjector, FaultPlan, FaultSpec, InjectedFault,
+                     corrupt_plan_arrays)
+from .guardrails import check_plan_integrity
+from .snapshot import (RankCheckpoint, load_rank_checkpoint,
+                       restore_scheduler, save_rank_checkpoint,
+                       snapshot_scheduler)
+
+__all__ = [
+    "ResilienceConfig",
+    "FaultInjector", "FaultPlan", "FaultSpec", "InjectedFault",
+    "corrupt_plan_arrays", "check_plan_integrity",
+    "RankCheckpoint", "load_rank_checkpoint", "save_rank_checkpoint",
+    "snapshot_scheduler", "restore_scheduler",
+]

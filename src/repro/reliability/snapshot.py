@@ -1,0 +1,204 @@
+"""Crash-safe recovery (DESIGN.md §10).
+
+Two artifacts, both one-``.npz``-read warm starts keyed by the graph's
+CONTENT fingerprint (core/plan.py) following the graphs/io.py
+conventions:
+
+- ``snapshot_scheduler``/``restore_scheduler``: the serving state of a
+  ``SlotScheduler`` — every in-flight query's spec + its CURRENT slot
+  rank column, and every queued query's spec.  Power iteration is
+  memoryless given (pr column, base seed), so a restored scheduler
+  continues each in-flight query from its exact iterate: same final
+  iteration count, same ranks as the uninterrupted run — no cold
+  recompute.
+- ``save_rank_checkpoint``/``load_rank_checkpoint``: one converged
+  rank vector + the residual it achieved, fingerprint-stamped.
+  ``Session.load_checkpoint`` (repro/api.py) accepts it directly when
+  fingerprints match, or across a ``GraphDelta`` chain (the delta's
+  shifted fingerprint proves the lineage) by warm-starting the
+  residual-push updater (stream/incremental.py) from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+SNAPSHOT_VERSION = 1
+CHECKPOINT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Rank-vector checkpoints
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RankCheckpoint:
+    """A persisted solve: ranks + the L1 step-residual they achieved,
+    stamped with the content fingerprint of the graph they solve."""
+    graph_fp: str
+    ranks: np.ndarray
+    residual: float
+    damping: float
+    dangling: str
+
+
+def save_rank_checkpoint(path: str, g, ranks, *, residual: float,
+                         damping: float, dangling: str) -> None:
+    from ..core.plan import graph_fingerprint
+    meta = {"version": CHECKPOINT_VERSION,
+            "graph_fp": graph_fingerprint(g),
+            "residual": float(residual), "damping": float(damping),
+            "dangling": dangling}
+    np.savez_compressed(path, __meta__=json.dumps(meta),
+                        ranks=np.asarray(ranks, dtype=np.float32))
+
+
+def load_rank_checkpoint(path: str) -> RankCheckpoint:
+    z = np.load(path)
+    meta = json.loads(str(z["__meta__"]))
+    if meta.get("version") != CHECKPOINT_VERSION:
+        raise ValueError(
+            f"unsupported rank-checkpoint version {meta.get('version')!r}"
+            f" in {path!r}")
+    return RankCheckpoint(meta["graph_fp"], z["ranks"],
+                          meta["residual"], meta["damping"],
+                          meta["dangling"])
+
+
+# ---------------------------------------------------------------------------
+# Scheduler snapshot / restore
+# ---------------------------------------------------------------------------
+def snapshot_scheduler(sch, path: str) -> None:
+    """Persist ``sch``'s serving state: per in-flight query its spec,
+    iteration count and CURRENT (n_pad,) rank column (extracted with
+    the compiled column read — no retrace), and per queued query its
+    spec.  Deadlines are stored as REMAINING seconds and re-based on
+    the restoring process's clock.  Completed results are not included
+    — they were already delivered."""
+    from ..core.plan import graph_fingerprint
+    import jax.numpy as jnp  # noqa: F401  (sch executables live on jax)
+    now = sch.clock()
+    specs, seeds, cols = [], [], []
+    for slot, q in enumerate(sch._slot_query):
+        if q is None:
+            continue
+        col = np.asarray(sch._extract_c(
+            sch._pr, sch._put_small(np.int32(slot))), dtype=np.float32)
+        specs.append((q, int(sch._iters[slot]), True))
+        seeds.append(q.seed if q.seed is not None
+                     else np.zeros(sch._n_pad, np.float32))
+        cols.append(col)
+    for q in sch._queue:
+        specs.append((q, 0, False))
+        seeds.append(q.seed if q.seed is not None
+                     else np.zeros(sch._n_pad, np.float32))
+        cols.append(np.zeros(sch._n_pad, np.float32))
+    k = len(specs)
+    meta = {"version": SNAPSHOT_VERSION,
+            "graph_fp": graph_fingerprint(sch.g),
+            "damping": sch.damping, "dangling": sch.dangling,
+            "n_pad": sch._n_pad,
+            "uid_floor": (max(q.uid for q, _, _ in specs) + 1
+                          if specs else 0)}
+    np.savez_compressed(
+        path, __meta__=json.dumps(meta),
+        q_uid=np.array([q.uid for q, _, _ in specs], np.int64),
+        q_tol=np.array([q.tol for q, _, _ in specs], np.float64),
+        q_max_iters=np.array([q.max_iters for q, _, _ in specs],
+                             np.int64),
+        q_iters=np.array([it for _, it, _ in specs], np.int64),
+        q_top_k=np.array([q.top_k if q.top_k is not None else -1
+                          for q, _, _ in specs], np.int64),
+        q_priority=np.array([q.priority for q, _, _ in specs],
+                            np.int64),
+        q_deadline_rem=np.array(
+            [q.deadline - now if q.deadline is not None else np.nan
+             for q, _, _ in specs], np.float64),
+        q_retries=np.array([q.retries for q, _, _ in specs], np.int64),
+        q_degraded=np.array([q.degraded for q, _, _ in specs], bool),
+        q_inflight=np.array([fl for _, _, fl in specs], bool),
+        q_has_seed=np.array([q.seed is not None for q, _, _ in specs],
+                            bool),
+        seeds=(np.stack(seeds) if k else
+               np.zeros((0, sch._n_pad), np.float32)),
+        cols=(np.stack(cols) if k else
+              np.zeros((0, sch._n_pad), np.float32)))
+
+
+def restore_scheduler(path: str, g, **scheduler_kwargs):
+    """Rebuild a ``SlotScheduler`` on ``g`` from a snapshot: compile
+    fresh (device executables never serialize), then re-admit each
+    in-flight query and overwrite its slot column with the snapshotted
+    iterate, so serving resumes mid-query.  ``scheduler_kwargs`` must
+    describe the same serving configuration (damping/dangling are
+    cross-checked against the snapshot; a mismatch would silently
+    converge to different answers).  If the restored pool has fewer
+    slots than there were in-flight queries, the overflow re-enters
+    the queue (losing only its iteration progress, never the query).
+    Restored uids are preserved; the process uid counter is advanced
+    past them."""
+    import jax.numpy as jnp
+    import jax
+    from ..core.plan import graph_fingerprint
+    from ..serve.scheduler import (Query, SlotScheduler,
+                                   ensure_uid_floor)
+    z = np.load(path)
+    meta = json.loads(str(z["__meta__"]))
+    if meta.get("version") != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"unsupported scheduler-snapshot version "
+            f"{meta.get('version')!r} in {path!r}")
+    fp = graph_fingerprint(g)
+    if meta["graph_fp"] != fp:
+        raise ValueError(
+            "snapshot/graph mismatch: snapshot was taken on a graph "
+            f"with content fingerprint {meta['graph_fp'][:12]}…, got "
+            f"{fp[:12]}… — restoring would serve wrong answers")
+    sch = SlotScheduler(g, **scheduler_kwargs)
+    if (sch.damping, sch.dangling) != (meta["damping"],
+                                       meta["dangling"]):
+        raise ValueError(
+            "snapshot/scheduler mismatch: snapshot ran damping="
+            f"{meta['damping']}, dangling={meta['dangling']!r}; the "
+            f"restored scheduler has damping={sch.damping}, "
+            f"dangling={sch.dangling!r}")
+    if sch._n_pad != meta["n_pad"]:
+        raise ValueError(
+            f"snapshot/scheduler mismatch: snapshot state is padded "
+            f"to {meta['n_pad']} rows, scheduler to {sch._n_pad} "
+            "(different sharding?)")
+    ensure_uid_floor(int(meta["uid_floor"]))
+    now = sch.clock()
+    free = [s for s in range(sch.slots)]
+    for i in range(len(z["q_uid"])):
+        rem = float(z["q_deadline_rem"][i])
+        top_k = int(z["q_top_k"][i])
+        q = Query(
+            uid=int(z["q_uid"][i]),
+            seed=(z["seeds"][i] if bool(z["q_has_seed"][i]) else None),
+            top_k=(top_k if top_k >= 0 else None),
+            tol=float(z["q_tol"][i]),
+            max_iters=int(z["q_max_iters"][i]),
+            deadline=(now + rem if np.isfinite(rem) else None),
+            priority=int(z["q_priority"][i]),
+            degraded=bool(z["q_degraded"][i]),
+            retries=int(z["q_retries"][i]))
+        sch.metrics.submitted(q.uid)
+        if bool(z["q_inflight"][i]) and free:
+            slot = free.pop(0)
+            sch._admit(slot, q)       # seeds base + resets bookkeeping
+            if q.max_iters == 0:
+                continue              # _admit already finished it
+            col = jnp.asarray(z["cols"][i])
+            if sch.sharded:
+                col = jax.device_put(col, sch._vec_sharding)
+            # overwrite the freshly-seeded column with the snapshotted
+            # iterate; base is deterministic from the seed, so the
+            # iteration continues exactly where it stopped
+            sch._pr = sch._restore_c(sch._pr, col,
+                                     sch._put_small(np.int32(slot)))
+            sch._iters[slot] = int(z["q_iters"][i])
+        else:
+            sch._queue.append(q)
+    return sch

@@ -6,11 +6,27 @@ headline numbers — p50/p99 end-to-end latency and queries/sec over the
 span between the first submit and the last completion — which is what
 ``benchmarks/serve_load.py`` reports and CI freezes as
 ``BENCH_serve.json``.
+
+Resilience accounting (DESIGN.md §10): traces carry terminal ``error``
+and ``degraded`` flags, and the recorder keeps named event counters
+(rejections, queue expiries, degradations, quarantines, stepper/delta
+failures) so every shed or degraded query is visible in the summary —
+nothing fails silently.  Latency percentiles are computed over the
+queries actually SERVED (error-free completions): a rejected query
+completes in microseconds and would otherwise drag p50 down exactly
+when the system is under the most stress.
+
+Edge-case contract: an empty recorder reports ``None`` for every
+statistic that has no defined value (percentiles, mean, qps) instead
+of fabricating 0.0 — and ``qps`` is ``None`` (not ``inf``) when the
+observed span is zero, keeping summaries JSON-clean.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
+from typing import Optional
 
 
 @dataclasses.dataclass
@@ -21,6 +37,8 @@ class QueryTrace:
     t_done: float | None = None
     iterations: int = 0
     converged: bool = False
+    error: Optional[str] = None     # terminal failure (reject/fault)
+    degraded: bool = False          # served approximate under pressure
 
     @property
     def latency_s(self) -> float | None:
@@ -35,10 +53,11 @@ class QueryTrace:
         return self.t_admit - self.t_submit
 
 
-def _percentile(sorted_vals: list[float], q: float) -> float:
-    """Nearest-rank percentile over an already-sorted list."""
+def _percentile(sorted_vals: list[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile over an already-sorted list; ``None``
+    when there is no data to take a percentile of."""
     if not sorted_vals:
-        return 0.0
+        return None
     idx = min(len(sorted_vals) - 1,
               max(0, round(q / 100.0 * (len(sorted_vals) - 1))))
     return sorted_vals[idx]
@@ -47,50 +66,90 @@ def _percentile(sorted_vals: list[float], q: float) -> float:
 class ServeMetrics:
     """Per-query trace collection with an aggregate summary.
 
-    The clock is injectable so tests can drive deterministic times.
+    The clock is injectable so tests can drive deterministic times;
+    schedulers share it for deadline arithmetic so a fake clock drives
+    the whole admission path.
     """
 
     def __init__(self, clock=time.perf_counter):
-        self._clock = clock
+        self.clock = clock
         self.traces: dict[int, QueryTrace] = {}
+        self.counters: collections.Counter = collections.Counter()
 
     def submitted(self, uid: int) -> None:
-        self.traces[uid] = QueryTrace(uid, self._clock())
+        self.traces[uid] = QueryTrace(uid, self.clock())
 
     def admitted(self, uid: int) -> None:
-        self.traces[uid].t_admit = self._clock()
+        self.traces[uid].t_admit = self.clock()
 
-    def completed(self, uid: int, *, iterations: int,
-                  converged: bool) -> None:
+    def completed(self, uid: int, *, iterations: int, converged: bool,
+                  error: Optional[str] = None,
+                  degraded: bool = False) -> None:
         tr = self.traces[uid]
-        tr.t_done = self._clock()
+        tr.t_done = self.clock()
         tr.iterations = iterations
         tr.converged = converged
+        tr.error = error
+        tr.degraded = degraded
+
+    def incr(self, name: str, n: int = 1) -> None:
+        """Count one resilience event (rejection, expiry, degradation,
+        quarantine, ...)."""
+        self.counters[name] += n
 
     @property
     def completed_count(self) -> int:
         return sum(tr.t_done is not None for tr in self.traces.values())
 
+    def percentile(self, q: float, *, of: str = "latency"
+                   ) -> Optional[float]:
+        """Nearest-rank percentile (seconds) over served completions;
+        ``of`` is ``"latency"`` (submit->done) or ``"queue"``
+        (submit->admit).  ``None`` on an empty recorder — the honest
+        answer, not 0.0."""
+        done = [tr for tr in self.traces.values()
+                if tr.t_done is not None and tr.error is None]
+        if of == "latency":
+            vals = sorted(tr.latency_s for tr in done)
+        elif of == "queue":
+            vals = sorted(tr.queue_wait_s for tr in done
+                          if tr.t_admit is not None)
+        else:
+            raise ValueError(f"unknown percentile kind {of!r}")
+        return _percentile(vals, q)
+
     def summary(self) -> dict:
         done = [tr for tr in self.traces.values() if tr.t_done is not None]
-        if not done:
-            return {"count": 0, "qps": 0.0, "p50_ms": 0.0, "p99_ms": 0.0,
-                    "mean_ms": 0.0, "queue_p50_ms": 0.0,
-                    "mean_iterations": 0.0, "converged_frac": 0.0}
-        lats = sorted(tr.latency_s for tr in done)
-        waits = sorted(tr.queue_wait_s for tr in done
-                       if tr.t_admit is not None)
-        span = (max(tr.t_done for tr in done)
-                - min(tr.t_submit for tr in done))
-        return {
+        served = [tr for tr in done if tr.error is None]
+        base = {
             "count": len(done),
-            "qps": len(done) / span if span > 0 else float("inf"),
-            "p50_ms": _percentile(lats, 50) * 1e3,
-            "p99_ms": _percentile(lats, 99) * 1e3,
-            "mean_ms": sum(lats) / len(lats) * 1e3,
-            "queue_p50_ms": _percentile(waits, 50) * 1e3,
-            "mean_iterations": (sum(tr.iterations for tr in done)
-                                / len(done)),
-            "converged_frac": (sum(tr.converged for tr in done)
-                               / len(done)),
+            "served_count": len(served),
+            "error_count": len(done) - len(served),
+            "degraded_count": sum(tr.degraded for tr in done),
+            "counters": dict(self.counters),
         }
+        if not served:
+            base.update({"qps": None, "p50_ms": None, "p99_ms": None,
+                         "mean_ms": None, "queue_p50_ms": None,
+                         "mean_iterations": None,
+                         "converged_frac": None})
+            return base
+        lats = sorted(tr.latency_s for tr in served)
+        waits = sorted(tr.queue_wait_s for tr in served
+                       if tr.t_admit is not None)
+        span = (max(tr.t_done for tr in served)
+                - min(tr.t_submit for tr in served))
+        p50, p99 = _percentile(lats, 50), _percentile(lats, 99)
+        qw = _percentile(waits, 50)
+        base.update({
+            "qps": len(served) / span if span > 0 else None,
+            "p50_ms": p50 * 1e3,
+            "p99_ms": p99 * 1e3,
+            "mean_ms": sum(lats) / len(lats) * 1e3,
+            "queue_p50_ms": qw * 1e3 if qw is not None else None,
+            "mean_iterations": (sum(tr.iterations for tr in served)
+                                / len(served)),
+            "converged_frac": (sum(tr.converged for tr in served)
+                               / len(served)),
+        })
+        return base

@@ -25,11 +25,24 @@ the cheap unit of work doing the heavy lifting:
 - ``GraphRegistry`` holds compiled schedulers for several graphs
   (warm-loaded via graphs/io.py) so one server process serves many
   graphs.
+
+Resilience (DESIGN.md §10, ``repro.reliability``): a ``ResilienceConfig``
+adds deadline/priority admission over a bounded queue (overload sheds
+load EXPLICITLY — rejected queries complete immediately with
+``QueryResult.error`` set), tolerance degradation under measured SLO
+pressure (approximate answers before drops), per-slot NaN/Inf
+quarantine (the stepper's freeze rule is finiteness-aware, so a
+poisoned column freezes on device and is re-admitted from a clean
+seed or failed explicitly while neighbours keep iterating), stepper-
+failure recovery, and integrity-checked plan rebinds.  All of it is
+host-side policy over the same single compiled stepper —
+``trace_count`` stays 1.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Optional
 
 import numpy as np
@@ -40,8 +53,9 @@ from ..core.backends import resolve_engine
 from ..core.plan import install_plan
 from ..core.pagerank import _inv_degree, masked_chunk_stepper
 from ..core.spmv import SpMVEngine
-from ..graphs.formats import Graph
+from ..graphs.formats import Graph, validate_graph
 from ..graphs import io as graph_io
+from ..reliability.admission import ResilienceConfig
 from .engine import (_mesh_shardings, _normalize_teleport,
                      _sharded_inv_degree)
 from .metrics import ServeMetrics
@@ -52,15 +66,31 @@ from .topk import make_slot_topk
 _uid_counter = itertools.count()
 
 
+def ensure_uid_floor(floor: int) -> None:
+    """Advance the process-global uid counter to at least ``floor`` —
+    snapshot restore keeps the restored queries' uids, so fresh
+    submissions must never collide with them."""
+    global _uid_counter
+    nxt = next(_uid_counter)
+    _uid_counter = itertools.count(max(nxt, floor))
+
+
 @dataclasses.dataclass
 class Query:
     """One PageRank request.  ``seed`` is the normalized (and, when
-    sharded, padded) teleport distribution — None means uniform."""
+    sharded, padded) teleport distribution — None means uniform.
+    ``deadline`` is an ABSOLUTE time on the scheduler's clock (queue
+    wait + service); ``priority`` orders admission (higher first, FIFO
+    within a priority)."""
     uid: int
     seed: Optional[np.ndarray] = None
     top_k: Optional[int] = None
     tol: float = 1e-6
     max_iters: int = 100
+    deadline: Optional[float] = None
+    priority: int = 0
+    degraded: bool = False        # tolerance loosened / served approx
+    retries: int = 0              # clean-seed re-admissions so far
 
 
 @dataclasses.dataclass
@@ -73,14 +103,16 @@ class QueryResult:
     ranks: Optional[np.ndarray] = None        # (n,) unless top_k set
     top_ids: Optional[np.ndarray] = None      # (k,) int32
     top_scores: Optional[np.ndarray] = None   # (k,) float32
+    error: Optional[str] = None               # explicit terminal failure
+    degraded: bool = False                    # approximate-answer mode
 
 
 class SlotScheduler:
     """Request queue + B-slot continuous batch over one AOT stepper.
 
     Construction does all tracing/compilation (stepper, admit,
-    extract); serving afterwards is pure data movement — the
-    acceptance invariant is ``trace_count == 1`` forever after.
+    extract, column-restore); serving afterwards is pure data movement
+    — the acceptance invariant is ``trace_count == 1`` forever after.
     """
 
     def __init__(self, g: Graph, *, slots: int = 4,
@@ -89,9 +121,12 @@ class SlotScheduler:
                  dangling: str = "none", sharded: bool = False,
                  num_shards: int | None = None,
                  engine: SpMVEngine | None = None,
-                 metrics: ServeMetrics | None = None):
+                 metrics: ServeMetrics | None = None,
+                 resilience: ResilienceConfig | None = None,
+                 fault_injector=None):
         if slots < 1:
             raise ValueError(f"need at least one slot; got {slots}")
+        validate_graph(g)
         self.g = g
         self.n = g.num_nodes
         self.slots = slots
@@ -104,6 +139,9 @@ class SlotScheduler:
                                      engine=engine)
         self.sharded = self.engine.backend.supports_sharding
         self.metrics = metrics or ServeMetrics()
+        self.clock = self.metrics.clock
+        self.resilience = resilience or ResilienceConfig()
+        self._injector = fault_injector       # test-only chaos hook
         self.trace_count = 0          # stepper traces — must stay 1
         self.admit_trace_count = 0    # column-admit traces — must stay 1
         self.rebind_count = 0         # plan swaps (apply_delta)
@@ -125,9 +163,6 @@ class SlotScheduler:
                                             sharding=rep)
             bud_spec = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=rep)
             col_spec = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
-            zeros = jax.device_put(
-                jnp.zeros((self._n_pad, B), jnp.float32),
-                self._state_sharding)
         else:
             self._n_pad = self.n
             self._vec_sharding = self._state_sharding = None
@@ -137,10 +172,10 @@ class SlotScheduler:
             tol_spec = jax.ShapeDtypeStruct((B,), jnp.float32)
             bud_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
             col_spec = jax.ShapeDtypeStruct((), jnp.int32)
-            zeros = jnp.zeros((self.n, B), jnp.float32)
         self._specs = (state_spec, act_spec, tol_spec, bud_spec,
                        seed_spec)
-        self._compile_stepper()
+        self._step_c, self._inv_deg = self._build_stepper(self.engine,
+                                                          self.g)
 
         dmp = damping
 
@@ -157,17 +192,18 @@ class SlotScheduler:
 
         self._extract_c = (jax.jit(lambda pr, col: pr[:, col])
                            .lower(state_spec, col_spec).compile())
+        # one-column overwrite of pr only (base untouched) — shared by
+        # fault poisoning and snapshot restore; shape-only like admit
+        self._restore_c = (
+            jax.jit(lambda pr, vec, col: jax.lax.dynamic_update_slice(
+                pr, vec[:, None], (0, col)), donate_argnums=(0,))
+            .lower(state_spec, seed_spec, col_spec).compile())
         self._topk_fn = make_slot_topk(self.n)
         self._topk_cache: dict[int, object] = {}
+        self._poison_cache: dict[str, object] = {}
         self._state_spec = state_spec
         self._col_spec = col_spec
 
-        # device slot-pool state (pr donated through step/admit; base
-        # donated through admit)
-        self._pr = zeros
-        self._base = (jax.device_put(jnp.zeros_like(zeros),
-                                     self._state_sharding)
-                      if self.sharded else jnp.zeros_like(zeros))
         # cached uniform teleport seed — admit never donates the seed
         # argument, so one device buffer serves every seeds=None query
         uni = np.zeros(self._n_pad, dtype=np.float32)
@@ -177,34 +213,71 @@ class SlotScheduler:
                               if self.sharded else jnp.asarray(uni))
 
         # host-side slot + queue state
-        self._slot_query: list[Optional[Query]] = [None] * B
         self._active = np.zeros(B, dtype=bool)
         self._iters = np.zeros(B, dtype=np.int64)
         self._tol = np.zeros(B, dtype=np.float32)
         self._max_iters = np.zeros(B, dtype=np.int64)
+        self._slot_res = np.full(B, -1.0, dtype=np.float64)
         self._queue: list[Query] = []
         self.completed: list[QueryResult] = []
+        self._init_pool_state()
+
+        # SLO pressure model: EWMA seconds-per-iteration of the warm
+        # stepper and EWMA iterations-per-served-query — what admission
+        # uses to predict whether a query can make its deadline
+        self._iter_s: Optional[float] = None
+        self._query_iters: Optional[float] = None
+        self._step_idx = 0            # monotone; fault-plan time base
+        self._delta_idx = 0
+        self._step_retries = 0
+
+    def _init_pool_state(self) -> None:
+        """(Re)allocate the device slot pool and clear the host slot
+        bookkeeping — construction, and recovery after a hard stepper
+        failure (donated buffers may be gone)."""
+        B = self.slots
+        if self.sharded:
+            zeros = jax.device_put(
+                jnp.zeros((self._n_pad, B), jnp.float32),
+                self._state_sharding)
+            base = jax.device_put(
+                jnp.zeros((self._n_pad, B), jnp.float32),
+                self._state_sharding)
+        else:
+            zeros = jnp.zeros((self.n, B), jnp.float32)
+            base = jnp.zeros((self.n, B), jnp.float32)
+        # pr donated through step/restore/admit; base donated through
+        # admit
+        self._pr = zeros
+        self._base = base
+        self._slot_query: list[Optional[Query]] = [None] * B
+        self._active[:] = False
+        self._iters[:] = 0
+        self._tol[:] = 0.0
+        self._max_iters[:] = 0
+        self._slot_res[:] = -1.0
 
     # ----------------------------------------------------- plan binding
-    def _compile_stepper(self) -> None:
-        """(Re)compile the chunk stepper against the CURRENT engine's
-        plan and refresh the inverse-degree vector.  Called once at
-        construction and once per ``apply_delta`` — the admit/extract/
-        top-k executables are shape-only and are NOT rebuilt."""
+    def _build_stepper(self, engine: SpMVEngine, g: Graph):
+        """Compile the chunk stepper against ``engine``'s plan and
+        build the matching inverse-degree vector — returns both WITHOUT
+        touching scheduler state, so ``apply_delta`` can fully validate
+        and compile a rebind before committing anything.  Called once
+        at construction and once per ``apply_delta``; the admit/
+        extract/restore/top-k executables are shape-only and are NOT
+        rebuilt."""
         if self.sharded:
             from ..core.distributed import sharded_chunk_stepper
             step = sharded_chunk_stepper(
-                self.engine.sharded_layout, self.engine.mesh,
-                self.engine.shard_axis, damping=self.damping,
+                engine.sharded_layout, engine.mesh,
+                engine.shard_axis, damping=self.damping,
                 chunk=self.chunk, dangling=self.dangling)
-            self._inv_deg = _sharded_inv_degree(self.g, self.engine,
-                                                self._vec_sharding)
+            inv_deg = _sharded_inv_degree(g, engine, self._vec_sharding)
         else:
-            step = masked_chunk_stepper(self.engine,
-                                        damping=self.damping,
+            step = masked_chunk_stepper(engine, damping=self.damping,
                                         chunk=self.chunk,
                                         dangling=self.dangling)
-            self._inv_deg = _inv_degree(self.g)
+            inv_deg = _inv_degree(g)
 
         def counted_step(pr, base, active, tol_col, budget, inv_deg):
             self.trace_count += 1     # increments only at trace time
@@ -212,9 +285,10 @@ class SlotScheduler:
                                     inv_deg)
 
         state_spec, act_spec, tol_spec, bud_spec, inv_spec = self._specs
-        self._step_c = (jax.jit(counted_step, donate_argnums=(0,))
-                        .lower(state_spec, state_spec, act_spec,
-                               tol_spec, bud_spec, inv_spec).compile())
+        step_c = (jax.jit(counted_step, donate_argnums=(0,))
+                  .lower(state_spec, state_spec, act_spec,
+                         tol_spec, bud_spec, inv_spec).compile())
+        return step_c, inv_deg
 
     def apply_delta(self, delta, *, g_new: Graph | None = None) -> None:
         """Swap the scheduler onto the delta-updated graph WITHOUT
@@ -227,27 +301,61 @@ class SlotScheduler:
         converge to the NEW graph's answer under their own tolerance;
         the admit/extract/top-k executables are shape-stable and
         survive untouched (``admit_trace_count`` stays 1).  Queued
-        queries simply get admitted against the new plan."""
+        queries simply get admitted against the new plan.
+
+        The rebind is ATOMIC: delta validation, plan patch, integrity
+        check (``resilience.verify_plans``) and stepper compile all
+        happen before any scheduler state changes, so a failing delta
+        (bad edges, corrupted plan, patcher bug) leaves the old plan
+        serving — the failure is counted and re-raised."""
         from ..stream.delta import apply_delta as apply_edges
         from ..stream.patch import patch_plan
-        if g_new is None:
-            g_new = apply_edges(self.g, delta)
-        # patch_plan falls back to a full rebuild for backends without
-        # a patcher (pcpm_sharded's all-to-all wire layout is global)
-        new_plan = patch_plan(self.engine.plan, delta, g_new)
+        self._delta_idx += 1
+        try:
+            if self._injector is not None:
+                self._injector.check_delta(self._delta_idx)
+            delta.validate(self.g)
+            if g_new is None:
+                g_new = apply_edges(self.g, delta)
+            # patch_plan falls back to a full rebuild for backends
+            # without a patcher (pcpm_sharded's all-to-all wire layout
+            # is global)
+            new_plan = patch_plan(self.engine.plan, delta, g_new)
+            if self._injector is not None and \
+                    self._injector.wants_corrupt(self._delta_idx):
+                from ..reliability.faults import corrupt_plan_arrays
+                new_plan = corrupt_plan_arrays(new_plan)
+            if self.resilience.verify_plans:
+                from ..reliability.guardrails import check_plan_integrity
+                check_plan_integrity(new_plan)
+            new_engine = SpMVEngine(g_new, plan=new_plan)
+            step_c, inv_deg = self._build_stepper(new_engine, g_new)
+        except Exception:
+            self.metrics.incr("delta_failures")
+            raise
         self.g = g_new
-        self.engine = SpMVEngine(g_new, plan=new_plan)
+        self.engine = new_engine
+        self._step_c, self._inv_deg = step_c, inv_deg
         self.rebind_count += 1
-        self._compile_stepper()
 
     # ------------------------------------------------------------ intake
     def submit(self, seeds: np.ndarray | None = None, *,
                top_k: int | None = None, tol: float = 1e-6,
-               max_iters: int = 100) -> int:
+               max_iters: int = 100, deadline_s: float | None = None,
+               priority: int = 0) -> int:
         """Enqueue one query; returns its uid.  ``seeds`` is an (n,)
         teleport distribution (need not be normalized — it is), or None
         for uniform teleport.  ``tol=0`` runs exactly ``max_iters``
-        iterations."""
+        iterations.  ``deadline_s`` is a wall-clock budget from now
+        (queue wait + service; defaults to
+        ``resilience.default_deadline_s``); ``priority`` orders
+        admission, higher first.
+
+        When the admission queue is bounded (``resilience.max_queue``)
+        and full, the query is REJECTED EXPLICITLY: it completes
+        immediately with ``QueryResult.error`` set and the rejection
+        counted — the uid is still returned so the caller can find the
+        terminal result."""
         if max_iters < 0:
             raise ValueError(f"max_iters must be >= 0; got {max_iters}")
         if top_k is not None and not 1 <= top_k <= self.n:
@@ -259,10 +367,21 @@ class SlotScheduler:
                 np.asarray(seeds, dtype=np.float32).reshape(self.n))
             if self._n_pad != self.n:
                 seed = np.pad(seed, (0, self._n_pad - self.n))
+        if deadline_s is None:
+            deadline_s = self.resilience.default_deadline_s
+        deadline = (self.clock() + deadline_s
+                    if deadline_s is not None else None)
         uid = next(_uid_counter)
-        self._queue.append(Query(uid, seed, top_k, float(tol),
-                                 int(max_iters)))
+        q = Query(uid, seed, top_k, float(tol), int(max_iters),
+                  deadline, int(priority))
         self.metrics.submitted(uid)
+        cap = self.resilience.max_queue
+        if cap is not None and len(self._queue) >= cap:
+            self.metrics.incr("rejected")
+            self._terminal(q, error=f"rejected: admission queue full "
+                                    f"({cap})")
+            return uid
+        self._queue.append(q)
         return uid
 
     @property
@@ -281,6 +400,53 @@ class SlotScheduler:
         return (jax.device_put(x, self._rep_sharding) if self.sharded
                 else x)
 
+    def _terminal(self, q: Query, *, error: str) -> None:
+        """Complete a query that never reached a slot (rejection,
+        queue expiry) — explicit terminal state, never a silent drop."""
+        self.metrics.completed(q.uid, iterations=0, converged=False,
+                               error=error, degraded=q.degraded)
+        self.completed.append(QueryResult(
+            q.uid, 0, False, -1.0,
+            self.metrics.traces[q.uid].latency_s, error=error,
+            degraded=q.degraded))
+
+    def _pop_runnable(self) -> Optional[Query]:
+        """Next query to admit: expire queued queries already past
+        their deadline (explicit terminal state, counted), then pick
+        the highest priority, FIFO within a priority."""
+        if not self._queue:
+            return None
+        if any(q.deadline is not None for q in self._queue):
+            now = self.clock()
+            live = []
+            for q in self._queue:
+                if q.deadline is not None and now > q.deadline:
+                    self.metrics.incr("expired")
+                    self._terminal(q, error="deadline expired in queue")
+                else:
+                    live.append(q)
+            self._queue = live
+            if not self._queue:
+                return None
+        best = max(range(len(self._queue)),
+                   key=lambda i: (self._queue[i].priority, -i))
+        return self._queue.pop(best)
+
+    def _maybe_degrade(self, q: Query) -> None:
+        """Approximate-answer mode (DESIGN.md §10): when the EWMA
+        service model predicts the query cannot converge at its
+        requested tolerance inside its deadline, loosen the tolerance
+        at admission — a degraded answer beats a shed query."""
+        cfg = self.resilience
+        if (q.deadline is None or q.tol >= cfg.degrade_tol
+                or self._iter_s is None or self._query_iters is None):
+            return
+        remaining = q.deadline - self.clock()
+        if self._query_iters * self._iter_s > remaining:
+            q.tol = cfg.degrade_tol
+            q.degraded = True
+            self.metrics.incr("degraded")
+
     def _admit(self, slot: int, q: Query) -> None:
         seed_dev = (self._uniform_seed if q.seed is None
                     else (jax.device_put(jnp.asarray(q.seed),
@@ -294,6 +460,7 @@ class SlotScheduler:
         self._iters[slot] = 0
         self._tol[slot] = q.tol
         self._max_iters[slot] = q.max_iters
+        self._slot_res[slot] = -1.0
         self.metrics.admitted(q.uid)
         if q.max_iters == 0:          # degenerate: serve the seed as-is
             self._finish(slot, q, residual=-1.0)
@@ -304,7 +471,11 @@ class SlotScheduler:
             if not self._queue:
                 break
             if self._slot_query[slot] is None:
-                self._admit(slot, self._queue.pop(0))
+                q = self._pop_runnable()
+                if q is None:
+                    break
+                self._maybe_degrade(q)
+                self._admit(slot, q)
                 admitted += 1
         return admitted
 
@@ -315,33 +486,146 @@ class SlotScheduler:
         that froze.  Returns the number of queries completed (including
         any finished at admission, e.g. ``max_iters=0``)."""
         before = len(self.completed)
+        self._step_idx += 1
         self._admit_from_queue()
         if not self._active.any():
             return len(self.completed) - before
+        if self._injector is not None:
+            self._inject_poisons()
         budget = np.minimum(self._max_iters - self._iters,
                             np.iinfo(np.int32).max).astype(np.int32)
-        self._pr, active, took, res = self._step_c(
-            self._pr, self._base, self._put_small(self._active),
-            self._put_small(self._tol),
-            self._put_small(np.maximum(budget, 0)), self._inv_deg)
+        t0 = time.perf_counter()
+        try:
+            if self._injector is not None:
+                self._injector.check_step(self._step_idx)
+            self._pr, active, took, res = self._step_c(
+                self._pr, self._base, self._put_small(self._active),
+                self._put_small(self._tol),
+                self._put_small(np.maximum(budget, 0)), self._inv_deg)
+        except Exception as exc:      # noqa: BLE001 — resilience layer
+            self._recover_step_failure(exc)
+            return len(self.completed) - before
+        self._step_retries = 0
+        ran = self._active.copy()
         active = np.asarray(active)
-        self._iters += np.asarray(took)
+        took = np.asarray(took)
         res = np.asarray(res)
+        self._iters += took
+        self._update_pressure(time.perf_counter() - t0, int(took.max()))
+        requeue: list[int] = []
         for slot in range(self.slots):
             q = self._slot_query[slot]
-            if q is None or active[slot]:
+            if q is None or not ran[slot]:
+                continue              # empty / idle before the call
+            if not np.isfinite(res[slot]):
+                # poisoned column: the finiteness-aware freeze rule
+                # stopped it on device; neighbours kept iterating
+                self.metrics.incr("quarantined")
+                if q.retries < self.resilience.max_retries:
+                    q.retries += 1
+                    requeue.append(slot)
+                else:
+                    self._fail_slot(
+                        slot, q,
+                        error=f"quarantined: non-finite residual after "
+                              f"{int(self._iters[slot])} iterations")
                 continue
-            if not self._active[slot]:
-                continue              # was already idle before the call
+            if res[slot] >= 0.0:
+                self._slot_res[slot] = float(res[slot])
+            if active[slot]:
+                continue
             self._finish(slot, q, residual=float(res[slot]))
         self._active = active & np.array(
             [q is not None for q in self._slot_query])
+        for slot in requeue:
+            # clean-seed re-admission overwrites the poisoned column
+            self.metrics.incr("requeued")
+            self._admit(slot, self._slot_query[slot])
+        self._sweep_deadlines()
         return len(self.completed) - before
+
+    def _inject_poisons(self) -> None:
+        """Test-only chaos hook: overwrite scheduled slot columns with
+        NaN/Inf before the next dispatch (via the compiled column-
+        restore write — no retrace)."""
+        live = [s for s in range(self.slots) if self._active[s]]
+        for slot, kind in self._injector.poisons(self._step_idx, live):
+            if not self._active[slot]:
+                continue
+            buf = self._poison_cache.get(kind)
+            if buf is None:
+                val = np.nan if kind == "nan_slot" else np.inf
+                vec = jnp.full((self._n_pad,), val, jnp.float32)
+                buf = (jax.device_put(vec, self._vec_sharding)
+                       if self.sharded else vec)
+                self._poison_cache[kind] = buf
+            self._pr = self._restore_c(self._pr, buf,
+                                       self._put_small(np.int32(slot)))
+
+    def _update_pressure(self, dt: float, max_took: int) -> None:
+        if max_took <= 0:
+            return
+        per = dt / max_took
+        self._iter_s = (per if self._iter_s is None
+                        else 0.7 * self._iter_s + 0.3 * per)
+
+    def _recover_step_failure(self, exc: Exception) -> None:
+        """A stepper dispatch raised.  Transient failures (within
+        ``max_step_retries``, device state intact) are retried on the
+        next ``step()``; otherwise the in-flight pool is declared lost
+        — every active query fails EXPLICITLY and the pool is
+        reallocated so queued queries keep being served."""
+        self.metrics.incr("stepper_failures")
+        self._step_retries += 1
+        lost = getattr(self._pr, "is_deleted", lambda: False)()
+        if (self._step_retries <= self.resilience.max_step_retries
+                and not lost):
+            return                    # retry the same dispatch next step
+        for slot in range(self.slots):
+            q = self._slot_query[slot]
+            if q is not None:
+                self._fail_slot(slot, q,
+                                error=f"stepper failure: {exc}")
+        self._init_pool_state()
+        self._step_retries = 0
+
+    def _sweep_deadlines(self) -> None:
+        """Finish in-flight queries past their deadline with their
+        CURRENT iterate — an explicit approximate answer (flagged
+        ``degraded``), not a cancellation."""
+        if not any(q is not None and q.deadline is not None
+                   for q in self._slot_query):
+            return
+        now = self.clock()
+        for slot in range(self.slots):
+            q = self._slot_query[slot]
+            if q is None or q.deadline is None or now <= q.deadline:
+                continue
+            self.metrics.incr("deadline_hits")
+            q.degraded = True
+            self._finish(slot, q, residual=float(self._slot_res[slot]))
+
+    def _fail_slot(self, slot: int, q: Query, *, error: str) -> None:
+        """Explicit terminal failure of an in-flight query: no ranks
+        are extracted (the column may be poisoned), the slot is freed."""
+        it = int(self._iters[slot])
+        self.metrics.completed(q.uid, iterations=it, converged=False,
+                               error=error, degraded=q.degraded)
+        self.completed.append(QueryResult(
+            q.uid, it, False, float("nan"),
+            self.metrics.traces[q.uid].latency_s, error=error,
+            degraded=q.degraded))
+        self._slot_query[slot] = None
+        self._active[slot] = False
 
     def _finish(self, slot: int, q: Query, *, residual: float) -> None:
         it = int(self._iters[slot])
         converged = 0.0 <= residual < q.tol
-        self.metrics.completed(q.uid, iterations=it, converged=converged)
+        self.metrics.completed(q.uid, iterations=it, converged=converged,
+                               degraded=q.degraded)
+        if converged:
+            self._query_iters = (float(it) if self._query_iters is None
+                                 else 0.7 * self._query_iters + 0.3 * it)
         col = self._put_small(np.int32(slot))
         if q.top_k is not None:
             topk_c = self._topk_cache.get(q.top_k)
@@ -354,12 +638,14 @@ class SlotScheduler:
             result = QueryResult(
                 q.uid, it, converged, residual,
                 self.metrics.traces[q.uid].latency_s,
-                top_ids=np.asarray(ids), top_scores=np.asarray(scores))
+                top_ids=np.asarray(ids), top_scores=np.asarray(scores),
+                degraded=q.degraded)
         else:
             ranks = np.asarray(self._extract_c(self._pr, col))[:self.n]
             result = QueryResult(
                 q.uid, it, converged, residual,
-                self.metrics.traces[q.uid].latency_s, ranks=ranks)
+                self.metrics.traces[q.uid].latency_s, ranks=ranks,
+                degraded=q.degraded)
         self.completed.append(result)
         self._slot_query[slot] = None
         self._active[slot] = False

@@ -34,12 +34,17 @@ _EMPTY = np.empty(0, dtype=np.int32)
 
 
 def _as_edges(edges) -> tuple[np.ndarray, np.ndarray]:
-    e = np.asarray(edges, dtype=np.int32)
+    e = np.asarray(edges)
     if e.size == 0:
         return _EMPTY, _EMPTY
+    if e.dtype.kind not in "iu":
+        raise ValueError(
+            f"delta edges must be integer-typed; got dtype {e.dtype} "
+            "(converting floats would silently truncate node ids)")
     if e.ndim != 2 or e.shape[1] != 2:
         raise ValueError(f"edges must be (m, 2) (src, dst) pairs; "
                          f"got shape {e.shape}")
+    e = e.astype(np.int32, copy=False)
     return (np.ascontiguousarray(e[:, 0]), np.ascontiguousarray(e[:, 1]))
 
 

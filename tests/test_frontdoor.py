@@ -1,0 +1,161 @@
+"""Front-door validation: malformed graphs, deltas, and queries fail
+with crisp ValueErrors at the boundary instead of corrupting plans or
+producing garbage ranks deep inside a kernel (DESIGN.md §10).
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core.plan import PlanConfig, build_plan
+from repro.graphs.formats import Graph, from_edge_list, validate_graph
+from repro.serve import ServeMetrics
+from repro.stream.delta import GraphDelta
+
+
+def _edges(*pairs):
+    e = np.array(pairs, np.int32)
+    return e[:, 0], e[:, 1]
+
+
+class TestGraphConstruction:
+    def test_rejects_float_arrays(self):
+        with pytest.raises(ValueError, match="int32"):
+            Graph(2, np.array([0.0, 1.0]), np.array([1.0, 0.0]))
+
+    def test_rejects_wrong_dims(self):
+        s, d = _edges((0, 1))
+        with pytest.raises(ValueError, match="1-D"):
+            Graph(2, s.reshape(1, 1), d.reshape(1, 1))
+
+    def test_rejects_length_mismatch(self):
+        with pytest.raises(ValueError, match="length"):
+            Graph(2, np.array([0, 1], np.int32),
+                  np.array([1], np.int32))
+
+    def test_rejects_nonpositive_num_nodes(self):
+        s, d = _edges((0, 0))
+        with pytest.raises(ValueError, match="num_nodes"):
+            Graph(0, s, d)
+
+    def test_from_edge_list_rejects_floats(self):
+        with pytest.raises(ValueError, match="integer"):
+            from_edge_list(2, np.array([[0.5, 1.0]]))
+
+    def test_from_edge_list_rejects_bad_shape(self):
+        with pytest.raises(ValueError, match=r"\(m, 2\)"):
+            from_edge_list(3, np.array([[0, 1, 2]], np.int32))
+
+
+class TestGraphRangeValidation:
+    def test_out_of_range_ids(self):
+        s, d = _edges((0, 5))       # dst 5 >= num_nodes 3
+        g = Graph(3, s, d)
+        with pytest.raises(ValueError, match="outside"):
+            validate_graph(g)
+
+    def test_negative_ids(self):
+        s, d = _edges((-1, 1))
+        g = Graph(3, s, d)
+        with pytest.raises(ValueError, match="outside"):
+            validate_graph(g)
+
+    def test_build_plan_validates(self):
+        s, d = _edges((0, 9))
+        g = Graph(4, s, d)
+        with pytest.raises(ValueError, match="outside"):
+            build_plan(g, PlanConfig(method="pcpm", part_size=64))
+
+    def test_session_validates(self):
+        s, d = _edges((0, 9))
+        g = Graph(4, s, d)
+        with pytest.raises(ValueError, match="outside"):
+            repro.open(g, method="pcpm", part_size=64)
+
+    def test_validation_memoized(self):
+        from repro.graphs import generators
+        g = generators.rmat(6, 4, seed=0)
+        validate_graph(g)
+        assert g.__dict__.get("_validated")
+        validate_graph(g)           # second call is O(1)
+
+
+class TestDeltaValidation:
+    def test_rejects_float_edges(self):
+        with pytest.raises(ValueError, match="integer"):
+            GraphDelta.insert(np.array([[0.5, 1.5]]))
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError, match=r"\(m, 2\)"):
+            GraphDelta.insert(np.array([[0, 1, 2]], np.int32))
+
+    def test_validate_out_of_range(self):
+        from repro.graphs import generators
+        g = generators.rmat(6, 4, seed=0)
+        bad = GraphDelta.insert(
+            np.array([[0, g.num_nodes + 3]], np.int32))
+        with pytest.raises(ValueError, match="out of range"):
+            bad.validate(g)
+        neg = GraphDelta.insert(np.array([[-2, 0]], np.int32))
+        with pytest.raises(ValueError, match="out of range"):
+            neg.validate(g)
+
+    def test_scheduler_apply_delta_validates(self):
+        from repro.graphs import generators
+        from repro.serve import SlotScheduler
+        g = generators.rmat(6, 4, seed=0)
+        sch = SlotScheduler(g, slots=2, method="pcpm", part_size=64,
+                            chunk=4)
+        bad = GraphDelta.insert(
+            np.array([[0, g.num_nodes + 1]], np.int32))
+        with pytest.raises(ValueError, match="out of range"):
+            sch.apply_delta(bad)
+        assert sch.metrics.counters["delta_failures"] == 1
+        sch.submit(tol=1e-4, max_iters=100)
+        assert all(r.converged for r in sch.run_until_drained())
+
+
+class TestMetricsEdgeCases:
+    def test_empty_recorder(self):
+        m = ServeMetrics()
+        assert m.percentile(50.0) is None
+        assert m.percentile(99.0, of="queue") is None
+        s = m.summary()
+        assert s["count"] == 0 and s["served_count"] == 0
+        assert s["p50_ms"] is None and s["qps"] is None
+
+    def test_error_completions_excluded_from_latency(self):
+        t = [0.0]
+        m = ServeMetrics()
+        m.clock = lambda: t[0]
+        m.submitted(1); m.submitted(2)
+        m.admitted(1); m.admitted(2)
+        t[0] = 1.0
+        m.completed(1, iterations=10, converged=True)
+        m.completed(2, iterations=0, converged=False,
+                    error="rejected: queue full")
+        s = m.summary()
+        assert s["count"] == 2
+        assert s["served_count"] == 1 and s["error_count"] == 1
+        assert s["mean_iterations"] == 10.0
+        assert s["converged_frac"] == 1.0   # over served only
+
+    def test_degraded_counted(self):
+        m = ServeMetrics()
+        m.submitted(1); m.admitted(1)
+        m.completed(1, iterations=5, converged=True, degraded=True)
+        assert m.summary()["degraded_count"] == 1
+
+    def test_counters(self):
+        m = ServeMetrics()
+        m.incr("rejected"); m.incr("rejected"); m.incr("quarantined")
+        assert m.summary()["counters"] == {"rejected": 2,
+                                           "quarantined": 1}
+
+    def test_single_completion_qps_not_inf(self):
+        """One completion => zero span; qps must be None, not inf."""
+        t = [0.0]
+        m = ServeMetrics()
+        m.clock = lambda: t[0]
+        m.submitted(1); m.admitted(1)
+        m.completed(1, iterations=3, converged=True)
+        assert m.summary()["qps"] is None

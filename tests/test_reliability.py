@@ -1,0 +1,412 @@
+"""Chaos suite for the serving resilience layer (DESIGN.md §10).
+
+Every fault here is injected through the deterministic, seedable
+``FaultInjector`` test hook — no monkeypatching of device code — and
+every test asserts the three resilience invariants:
+
+1. queries untouched by a fault finish within 1e-6 of the fault-free
+   run (blast-radius containment);
+2. ``trace_count`` stays 1 — no resilience path is allowed to cost a
+   retrace;
+3. affected queries end in an EXPLICIT terminal state (converged after
+   re-admission, or a ``QueryResult.error``) — never a hang, never a
+   silently-wrong answer.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.plan import PlanConfig, build_plan
+from repro.graphs import generators
+from repro.reliability import (FaultInjector, FaultPlan, FaultSpec,
+                               InjectedFault, ResilienceConfig,
+                               check_plan_integrity, corrupt_plan_arrays,
+                               load_rank_checkpoint, restore_scheduler,
+                               save_rank_checkpoint, snapshot_scheduler)
+from repro.serve import SlotScheduler
+from repro.stream.delta import apply_delta as apply_edges
+
+SMALL = dict(method="pcpm", part_size=64, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generators.rmat(8, 8, seed=1)
+
+
+def _seeds(g, k, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(k):
+        s = np.zeros(g.num_nodes, np.float32)
+        s[rng.integers(0, g.num_nodes, size=2)] = 1.0
+        out.append(s)
+    return out
+
+
+def _drain_map(sch):
+    sch.run_until_drained()
+    return {r.uid: r for r in sch.completed}
+
+
+@pytest.fixture(scope="module")
+def fault_free(g):
+    """uid -> QueryResult of the fault-free run, keyed by submit order."""
+    sch = SlotScheduler(g, slots=3, **SMALL)
+    uids = [sch.submit(s, tol=1e-6, max_iters=300) for s in _seeds(g, 6)]
+    results = _drain_map(sch)
+    return [results[u] for u in uids]
+
+
+class TestFaultPlan:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec("not_a_kind", step=1)
+        with pytest.raises(ValueError):
+            FaultSpec("nan_slot", step=0)
+
+    def test_deterministic_slot_choice(self):
+        plan = FaultPlan.of([FaultSpec("nan_slot", step=3)], seed=7)
+        picks = [FaultInjector(plan).poisons(3, [0, 1, 2])
+                 for _ in range(3)]
+        assert picks[0] == picks[1] == picks[2]
+
+    def test_exhausted(self):
+        inj = FaultInjector(FaultPlan.of([FaultSpec("step_error",
+                                                    step=1)]))
+        with pytest.raises(InjectedFault):
+            inj.check_step(1)
+        assert inj.exhausted and len(inj.fired) == 1
+        inj.check_step(1)          # fires once, then inert
+
+
+class TestQuarantine:
+    @pytest.mark.parametrize("kind", ["nan_slot", "inf_slot"])
+    def test_poisoned_slot_requeued_clean(self, g, fault_free, kind):
+        """A non-finite column freezes on-device, is detected at the
+        host, and re-admitted from its clean seed; neighbours keep
+        iterating to the fault-free answers."""
+        inj = FaultInjector(FaultPlan.of([FaultSpec(kind, step=2,
+                                                    slot=0)]))
+        sch = SlotScheduler(g, slots=3, fault_injector=inj,
+                            resilience=ResilienceConfig(max_retries=1),
+                            **SMALL)
+        uids = [sch.submit(s, tol=1e-6, max_iters=300)
+                for s in _seeds(g, 6)]
+        results = _drain_map(sch)
+        assert sch.metrics.counters["quarantined"] == 1
+        assert sch.metrics.counters["requeued"] == 1
+        assert sch.trace_count == 1
+        for ref, uid in zip(fault_free, uids):
+            r = results[uid]
+            assert r.error is None and r.converged
+            assert np.abs(ref.ranks - r.ranks).max() <= 1e-6
+
+    def test_no_retry_fails_explicitly(self, g, fault_free):
+        inj = FaultInjector(FaultPlan.of([FaultSpec("nan_slot", step=2,
+                                                    slot=0)]))
+        sch = SlotScheduler(g, slots=3, fault_injector=inj,
+                            resilience=ResilienceConfig(max_retries=0),
+                            **SMALL)
+        uids = [sch.submit(s, tol=1e-6, max_iters=300)
+                for s in _seeds(g, 6)]
+        results = _drain_map(sch)
+        failed = [r for r in results.values() if r.error]
+        assert len(failed) == 1 and "quarantined" in failed[0].error
+        assert not failed[0].converged
+        for ref, uid in zip(fault_free, uids):
+            if results[uid].error is None:
+                assert np.abs(ref.ranks
+                              - results[uid].ranks).max() <= 1e-6
+
+    @pytest.mark.skipif(
+        "XLA_FLAGS" not in os.environ
+        or "host_platform_device_count" not in os.environ["XLA_FLAGS"],
+        reason="needs forced host devices (CI reliability job)")
+    def test_sharded_quarantine(self, g):
+        """Same containment on the shard_map stepper: the psum'd
+        residual is replicated, so every shard freezes the poisoned
+        column in the same iteration."""
+        import jax
+        shards = jax.device_count()
+        assert shards >= 2
+        kw = dict(slots=2, method="pcpm_sharded", part_size=64,
+                  num_shards=shards, chunk=4)
+        ref = SlotScheduler(g, **kw)
+        ru = [ref.submit(s, tol=1e-6, max_iters=300)
+              for s in _seeds(g, 4)]
+        refm = _drain_map(ref)
+        inj = FaultInjector(FaultPlan.of([FaultSpec("nan_slot", step=2,
+                                                    slot=1)]))
+        sch = SlotScheduler(g, fault_injector=inj,
+                            resilience=ResilienceConfig(max_retries=1),
+                            **kw)
+        su = [sch.submit(s, tol=1e-6, max_iters=300)
+              for s in _seeds(g, 4)]
+        out = _drain_map(sch)
+        assert sch.metrics.counters["quarantined"] == 1
+        assert sch.trace_count == 1
+        for a, b in zip(ru, su):
+            assert np.abs(refm[a].ranks - out[b].ranks).max() <= 1e-6
+
+
+class TestStepFailure:
+    def test_transient_retry(self, g, fault_free):
+        inj = FaultInjector(FaultPlan.of([FaultSpec("step_error",
+                                                    step=2)]))
+        sch = SlotScheduler(
+            g, slots=3, fault_injector=inj,
+            resilience=ResilienceConfig(max_step_retries=1), **SMALL)
+        uids = [sch.submit(s, tol=1e-6, max_iters=300)
+                for s in _seeds(g, 6)]
+        results = _drain_map(sch)
+        assert sch.metrics.counters["stepper_failures"] == 1
+        for ref, uid in zip(fault_free, uids):
+            r = results[uid]
+            assert r.converged and r.error is None
+            assert np.abs(ref.ranks - r.ranks).max() <= 1e-6
+
+    def test_hard_failure_fails_inflight_keeps_serving(self, g):
+        """Past the retry budget the in-flight queries fail with
+        explicit errors, the pool state is rebuilt, and the queued
+        queries are still served correctly."""
+        inj = FaultInjector(FaultPlan.of([FaultSpec("step_error",
+                                                    step=2)]))
+        sch = SlotScheduler(
+            g, slots=3, fault_injector=inj,
+            resilience=ResilienceConfig(max_step_retries=0), **SMALL)
+        for s in _seeds(g, 6):
+            sch.submit(s, tol=1e-6, max_iters=300)
+        results = list(_drain_map(sch).values())
+        errs = [r for r in results if r.error]
+        oks = [r for r in results if not r.error]
+        assert len(errs) == 3 and all("stepper failure" in r.error
+                                      for r in errs)
+        assert len(oks) == 3 and all(r.converged for r in oks)
+
+
+class TestPlanFaults:
+    def test_delta_failure_leaves_scheduler_intact(self, g):
+        inj = FaultInjector(FaultPlan.of([FaultSpec("delta_error",
+                                                    step=1)]))
+        sch = SlotScheduler(g, slots=2, fault_injector=inj, **SMALL)
+        sch.submit(tol=1e-6, max_iters=300)
+        delta = repro.GraphDelta.insert(np.array([[1, 2]], np.int32))
+        with pytest.raises(InjectedFault):
+            sch.apply_delta(delta)
+        assert sch.metrics.counters["delta_failures"] == 1
+        assert sch.rebind_count == 0
+        assert all(r.converged for r in sch.run_until_drained())
+
+    def test_corrupt_plan_rejected_old_plan_serves(self, g):
+        """A corrupted patched plan is caught by the integrity check
+        BEFORE it is installed; the delta fails explicitly and the old
+        plan keeps serving."""
+        inj = FaultInjector(FaultPlan.of([FaultSpec("corrupt_plan",
+                                                    step=1)]))
+        sch = SlotScheduler(g, slots=2, fault_injector=inj, **SMALL)
+        sch.submit(tol=1e-6, max_iters=300)
+        delta = repro.GraphDelta.insert(np.array([[1, 2], [3, 4]],
+                                                 np.int32))
+        with pytest.raises(ValueError, match="plan integrity"):
+            sch.apply_delta(delta)
+        assert sch.metrics.counters["delta_failures"] == 1
+        assert sch.rebind_count == 0
+        assert all(r.converged for r in sch.run_until_drained())
+
+    @pytest.mark.parametrize("method", ["pdpr", "bvgas", "pcpm",
+                                        "pcpm_pallas"])
+    def test_integrity_accepts_real_plans(self, method):
+        """No false positives: fresh AND incrementally-patched plans of
+        every backend pass the integrity check, and a corrupted copy of
+        each fails it."""
+        from repro.stream.patch import patch_plan
+        g = generators.rmat(9, 8, seed=3)
+        delta = repro.GraphDelta.insert(
+            np.array([[1, 2], [300, 7], [8, 450]], np.int32))
+        plan = build_plan(g, PlanConfig(method=method, part_size=64))
+        check_plan_integrity(plan)
+        p2 = patch_plan(plan, delta, apply_edges(g, delta))
+        check_plan_integrity(p2)
+        with pytest.raises(ValueError, match="plan integrity"):
+            check_plan_integrity(corrupt_plan_arrays(plan))
+
+
+class TestOverload:
+    def test_burst_bounded_queue_explicit_rejections(self, g):
+        res = ResilienceConfig(max_queue=4, default_deadline_s=30.0)
+        sch = SlotScheduler(g, slots=2, resilience=res, **SMALL)
+        for s in _seeds(g, 12):
+            sch.submit(s, tol=1e-6, max_iters=300)
+        assert sch.queued <= 4      # depth bounded DURING the burst
+        results = list(_drain_map(sch).values())
+        rejected = [r for r in results if r.error
+                    and "rejected" in r.error]
+        served = [r for r in results if not r.error]
+        assert len(results) == 12              # every uid terminates
+        assert len(rejected) == 12 - 4         # shed load is explicit
+        assert sch.metrics.counters["rejected"] == 8
+        assert all(r.converged for r in served)
+        # p99 of ADMITTED queries stays within the deadline
+        p99 = sch.metrics.percentile(99.0)
+        assert p99 is not None and p99 <= 30.0
+
+    def test_deadline_expires_in_queue(self, g):
+        t = [0.0]
+        sch = SlotScheduler(g, slots=1,
+                            resilience=ResilienceConfig(max_queue=8),
+                            **SMALL)
+        sch.metrics.clock = lambda: t[0]
+        sch.clock = sch.metrics.clock
+        u1 = sch.submit(_seeds(g, 1)[0], tol=1e-6, max_iters=300)
+        u2 = sch.submit(_seeds(g, 1)[0], tol=1e-6, max_iters=300,
+                        deadline_s=0.5)
+        t[0] = 1.0                 # u2's deadline passes while queued
+        results = _drain_map(sch)
+        assert "deadline" in results[u2].error
+        assert results[u1].converged
+        assert sch.metrics.counters["expired"] == 1
+
+    def test_degrades_before_dropping(self, g):
+        """Under measured SLO pressure a tight-tolerance query is
+        admitted at the degraded tolerance instead of being dropped,
+        and the result is marked."""
+        sch = SlotScheduler(
+            g, slots=2,
+            resilience=ResilienceConfig(degrade_tol=1e-3), **SMALL)
+        sch._iter_s = 0.05          # prime the pressure model:
+        sch._query_iters = 60.0     # predicted service 3s > deadline
+        u = sch.submit(_seeds(g, 1)[0], tol=1e-8, max_iters=300,
+                       deadline_s=1.0)
+        results = _drain_map(sch)
+        assert results[u].degraded and results[u].error is None
+        assert sch.metrics.counters["degraded"] == 1
+
+    def test_priority_order(self, g):
+        sch = SlotScheduler(g, slots=1, **SMALL)
+        lo = sch.submit(_seeds(g, 1)[0], tol=1e-6, max_iters=300)
+        sch.step()                  # lo occupies the only slot
+        a = sch.submit(_seeds(g, 2)[1], tol=1e-6, max_iters=300,
+                       priority=0)
+        b = sch.submit(_seeds(g, 3)[2], tol=1e-6, max_iters=300,
+                       priority=5)
+        results = sch.run_until_drained()
+        order = [r.uid for r in results]
+        assert order.index(b) < order.index(a)
+
+
+class TestSnapshotRestore:
+    def test_roundtrip_matches_uninterrupted(self, g, fault_free):
+        """snapshot -> (process death) -> restore resumes the in-flight
+        queries to the SAME iteration counts and answers as the
+        uninterrupted run — power iteration is memoryless given the
+        rank column, so no cold recompute and no drift."""
+        sch = SlotScheduler(g, slots=3, **SMALL)
+        uids = [sch.submit(s, tol=1e-6, max_iters=300)
+                for s in _seeds(g, 6)]
+        for _ in range(3):
+            sch.step()             # some in flight, some still queued
+        assert sch.active_slots == 3 and sch.queued == 3
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "sched.npz")
+            snapshot_scheduler(sch, path)
+            restored = restore_scheduler(path, g, slots=3, **SMALL)
+        results = _drain_map(restored)
+        assert restored.trace_count == 1
+        for ref, uid in zip(fault_free, uids):
+            r = results[uid]
+            assert r.iterations == ref.iterations
+            assert np.abs(ref.ranks - r.ranks).max() <= 1e-6
+
+    def test_restore_rejects_wrong_graph(self, g):
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        sch.submit(tol=1e-6, max_iters=300)
+        sch.step()
+        other = generators.rmat(8, 8, seed=99)
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "sched.npz")
+            snapshot_scheduler(sch, path)
+            with pytest.raises(ValueError, match="fingerprint"):
+                restore_scheduler(path, other, slots=2, **SMALL)
+
+    def test_uid_floor_survives_restart(self, g):
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        uid = sch.submit(tol=1e-6, max_iters=300)
+        sch.step()
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "sched.npz")
+            snapshot_scheduler(sch, path)
+            restored = restore_scheduler(path, g, slots=2, **SMALL)
+        assert restored.submit(tol=1e-6, max_iters=10) > uid
+
+
+class TestRankCheckpoint:
+    def test_file_roundtrip(self, g):
+        ranks = np.random.default_rng(0).random(g.num_nodes,
+                                                ).astype(np.float32)
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "ck.npz")
+            save_rank_checkpoint(path, g, ranks, residual=1e-7,
+                                 damping=0.85, dangling="none")
+            ck = load_rank_checkpoint(path)
+        assert np.array_equal(ck.ranks, ranks)
+        assert ck.residual == pytest.approx(1e-7)
+        assert ck.damping == 0.85 and ck.dangling == "none"
+
+    def test_session_warm_restart(self, g):
+        sess = repro.open(g, method="pcpm", part_size=64, tol=1e-6,
+                          num_iterations=200)
+        cold = sess.pagerank()
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "ck.npz")
+            sess.save_checkpoint(path)
+            fresh = repro.open(g, method="pcpm", part_size=64,
+                               tol=1e-6, num_iterations=200)
+            fresh.load_checkpoint(path)
+            warm = fresh.pagerank(warm=True)
+        assert len(warm.residuals) < len(cold.residuals)
+        assert np.abs(np.asarray(warm.ranks)
+                      - np.asarray(cold.ranks)).max() <= 1e-6
+
+    def test_session_restart_across_delta_chain(self, g):
+        """Checkpoint on g, restart after g+delta: the fingerprint
+        lineage is verified and the warm solve routes through the
+        residual-push updater instead of a cold run."""
+        delta = repro.GraphDelta.insert(np.array([[3, 9], [100, 4]],
+                                                 np.int32))
+        sess = repro.open(g, method="pcpm", part_size=64, tol=1e-6,
+                          num_iterations=200)
+        sess.pagerank()
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "ck.npz")
+            sess.save_checkpoint(path)
+            restarted = repro.open(g, method="pcpm", part_size=64,
+                                   tol=1e-6, num_iterations=200)
+            restarted.apply_delta(delta)
+            restarted.load_checkpoint(path, g_old=g, delta=delta)
+            warm = restarted.pagerank(warm=True)
+            cold = repro.open(restarted.graph, method="pcpm",
+                              part_size=64, tol=1e-6,
+                              num_iterations=200).pagerank()
+        assert len(warm.residuals) < len(cold.residuals)
+        assert np.abs(np.asarray(warm.ranks)
+                      - np.asarray(cold.ranks)).max() <= 1e-6
+
+    def test_checkpoint_rejects_wrong_lineage(self, g):
+        sess = repro.open(g, method="pcpm", part_size=64, tol=1e-6,
+                          num_iterations=200)
+        sess.pagerank()
+        other = generators.rmat(8, 8, seed=99)
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "ck.npz")
+            sess.save_checkpoint(path)
+            s2 = repro.open(other, method="pcpm", part_size=64)
+            with pytest.raises(ValueError, match="different graph"):
+                s2.load_checkpoint(path)
+            with pytest.raises(ValueError, match="delta chain"):
+                s2.load_checkpoint(
+                    path, g_old=g, delta=repro.GraphDelta.insert(
+                        np.array([[1, 1]], np.int32)))
