@@ -24,7 +24,8 @@ def main(argv=None) -> int:
                     help="default: n/64 (paper-regime partition count)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
-                         "table7 dist e2e sharded serve stream")
+                         "table7 dist e2e sharded serve serve_push "
+                         "stream")
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="enable the sharded fused-loop comparison "
                          "with N shards (clamped to visible devices; "
@@ -56,7 +57,8 @@ def main(argv=None) -> int:
     from . import (table4_runtime, fig8_comm, table5_locality,
                    table6_comm_locality, fig12_partition_sweep,
                    table7_preproc, dist_wire, pagerank_e2e,
-                   sharded_loop, serve_load, stream_updates)
+                   sharded_loop, serve_load, serve_push,
+                   stream_updates)
     jobs = {
         "table4": lambda: table4_runtime.run(
             datasets, part_size=args.part_size),
@@ -77,15 +79,19 @@ def main(argv=None) -> int:
             part_size=args.part_size),
         "serve": lambda: serve_load.run(
             datasets[:2], part_size=args.part_size),
+        "serve_push": lambda: serve_push.run(
+            datasets[:2], part_size=args.part_size),
         "stream": lambda: stream_updates.run(
             datasets[:1], part_size=args.part_size),
     }
     selected = args.only or [j for j in jobs
-                             if j not in ("sharded", "serve")]
+                             if j not in ("sharded", "serve",
+                                          "serve_push")]
     if args.shards and "sharded" not in selected:
         selected = selected + ["sharded"]
-    if args.serve and "serve" not in selected:
-        selected = selected + ["serve"]
+    if args.serve:
+        selected = selected + [j for j in ("serve", "serve_push")
+                               if j not in selected]
     if "sharded" in selected and args.shards is None:
         args.shards = 8          # job default, recorded in the JSON doc
     out = Csv()

@@ -1,0 +1,177 @@
+"""A/B benchmark: forward-push query backend vs the masked chunk
+stepper on the loose-tolerance top-k personalized workload the push
+route exists for (serve/push.py, DESIGN.md §11).
+
+Both sides run through the SAME ``SlotScheduler`` — only ``route``
+differs — so the comparison includes every serving cost (admission,
+metrics, top-k extraction), not just the solver kernel.  Saturation
+mode: the whole workload is offered at t=0 and the measured
+queries/sec is the capacity of that route.
+
+Rows per dataset and tolerance:
+
+- ``serve_push/<ds>/push@<tol>``     — p50 latency (us) via the push
+  route; derived carries qps / p99 / fallback count / mean sweeps.
+- ``serve_push/<ds>/stepper@<tol>``  — the identical workload forced
+  through the masked stepper; derived carries qps / p99 / speedup
+  (push qps over stepper qps — the acceptance headline).
+
+Standalone smoke mode (what CI runs after ``serve_load --smoke``):
+
+    PYTHONPATH=src python -m benchmarks.serve_push --smoke \
+        --json BENCH_serve.json
+
+``--json`` MERGES into an existing BENCH_serve.json (serve_load.py
+owns and overwrites that file, so this module must run second and
+append its rows rather than clobber the load rows).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.serve import ServeMetrics, SlotScheduler
+from repro.graphs import generators
+from .common import Csv, Dataset, suite
+
+TOLS = (1e-3, 1e-4)     # headline first; both stay in the push-
+                        # eligible regime (tol >= push_tol = 1e-4)
+
+
+def _onehot_workload(n: int, num_queries: int, *, seed: int):
+    rng = np.random.default_rng(seed)
+    nodes = rng.integers(0, n, size=num_queries)
+    out = []
+    for node in nodes:
+        s = np.zeros(n, np.float32)
+        s[node] = 1.0
+        out.append(s)
+    return out
+
+
+def _drive(sch: SlotScheduler, workload, *, route: str, tol: float,
+           top_k: int, max_iters: int) -> dict:
+    """Saturation drain: offer everything at t=0, measure capacity."""
+    for s in workload:
+        sch.submit(s, top_k=top_k, tol=tol, max_iters=max_iters,
+                   route=route)
+    sch.run_until_drained()
+    assert sch.trace_count <= 1, "scheduler retraced under load"
+    s = sch.metrics.summary()
+    assert s["error_count"] == 0
+    assert s["converged_frac"] == 1.0
+    return s
+
+
+def run(datasets: list[Dataset], *, slots: int = 4,
+        num_queries: int = 400, chunk: int = 4,
+        part_size: int = 65536, top_k: int = 16, max_iters: int = 300,
+        seed: int = 0) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        workload = _onehot_workload(ds.n, num_queries, seed=seed)
+        for tol in TOLS:
+            stats = {}
+            for route in ("push", "stepper"):
+                sch = SlotScheduler(ds.graph, slots=slots,
+                                    method="pcpm", part_size=part_size,
+                                    chunk=chunk, metrics=ServeMetrics())
+                # warm the route's compiled path off the clock
+                sch.submit(workload[0], top_k=top_k, tol=tol,
+                           max_iters=max_iters, route=route)
+                sch.run_until_drained()
+                sch.metrics = ServeMetrics()
+                sch.metrics.clock = time.perf_counter
+                stats[route] = _drive(sch, workload, route=route,
+                                      tol=tol, top_k=top_k,
+                                      max_iters=max_iters)
+                if route == "push":
+                    counters = stats[route]["counters"]
+                    csv.add(
+                        f"serve_push/{ds.name}/push@{tol:g}",
+                        stats[route]["p50_ms"] / 1e3,
+                        f"qps={stats[route]['qps']:.1f}"
+                        f",p99_ms={stats[route]['p99_ms']:.2f}"
+                        f",fallbacks={counters.get('push_fallbacks', 0)}"
+                        f",mean_sweeps="
+                        f"{stats[route]['mean_iterations']:.1f}"
+                        f",n={stats[route]['count']}")
+            speedup = stats["push"]["qps"] / stats["stepper"]["qps"]
+            csv.add(
+                f"serve_push/{ds.name}/stepper@{tol:g}",
+                stats["stepper"]["p50_ms"] / 1e3,
+                f"qps={stats['stepper']['qps']:.1f}"
+                f",p99_ms={stats['stepper']['p99_ms']:.2f}"
+                f",mean_iters={stats['stepper']['mean_iterations']:.1f}"
+                f",push_speedup={speedup:.1f}x")
+    return csv
+
+
+def _merge_json(path: str, rows, meta: dict) -> None:
+    """Append push rows into BENCH_serve.json without disturbing the
+    serve_load rows it already holds (run serve_load first)."""
+    doc = {}
+    if os.path.exists(path) and os.path.getsize(path) > 0:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except json.JSONDecodeError:
+            doc = {}
+    kept = [r for r in doc.get("rows", [])
+            if not r["name"].startswith("serve_push/")]
+    doc["rows"] = kept + [{"name": n, "us_per_call": round(us, 1),
+                           "derived": derived}
+                          for n, us, derived in rows]
+    doc["push_ab"] = meta
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--num-queries", type=int, default=400)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--top-k", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one small RMAT graph, B=4")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="merge rows into an existing "
+                         "BENCH_serve.json (append, not overwrite)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    if args.smoke:
+        g = generators.rmat(10, 8, seed=1)
+        datasets = [Dataset("rmat_smoke", g)]
+        part_size = 64
+        args.slots = 4
+    else:
+        datasets = suite(args.scale)[:2]
+        from .common import default_part_size
+        part_size = default_part_size(1 << args.scale)
+    print("name,us_per_call,derived")
+    out = run(datasets, slots=args.slots,
+              num_queries=args.num_queries, chunk=args.chunk,
+              part_size=part_size, top_k=args.top_k)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s, {len(out.rows)} rows", flush=True)
+    if args.json:
+        _merge_json(args.json, out.rows, meta={
+            "smoke": args.smoke, "slots": args.slots,
+            "num_queries": args.num_queries, "chunk": args.chunk,
+            "top_k": args.top_k, "tols": list(TOLS),
+            "total_seconds": round(total_s, 1),
+        })
+        print(f"# merged into {args.json}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -248,13 +248,17 @@ class Session:
         self._solved_res = float(ckpt.residual)
         return self
 
-    def serve(self, **overrides):
+    def serve(self, *, route: str = "auto", **overrides):
         """A continuous-batching ``SlotScheduler`` sharing this
-        session's plan (and compiled device streams)."""
+        session's plan (and compiled device streams).  ``route``
+        picks the personalized-query path (DESIGN.md §11):
+        ``"auto"`` sends loose-tolerance top-k queries through the
+        forward-push backend and the rest to the masked stepper,
+        ``"push"``/``"stepper"`` force one side for every query."""
         from .serve.scheduler import SlotScheduler
         cfg = self.config
         kw = dict(slots=cfg.slots, damping=cfg.damping, chunk=cfg.chunk,
-                  dangling=cfg.dangling)
+                  dangling=cfg.dangling, route=route)
         kw.update(overrides)
         return SlotScheduler(self.graph, engine=self.engine, **kw)
 

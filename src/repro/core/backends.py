@@ -54,6 +54,11 @@ class Backend:
     supports_aot: bool = True          # closure is .lower().compile()-able
     multi_vector: bool = True          # accepts (n, d) as well as (n,)
     uses_gather_block: bool = False    # plan depends on cfg.gather_block
+    # the forward-push QUERY backend (serve/push.py) can answer
+    # single-seed personalized queries against this backend's plans —
+    # single-device only: the push state is one (n,) vector, so the
+    # sharded all-to-all layout has nothing to shard
+    supports_push_query: bool = False
     phase_fns: Optional[
         Callable[[GraphPlan], tuple[Callable, Callable]]] = None
     # incremental plan patching (stream/patch.py): rebuild only the
@@ -443,17 +448,20 @@ def _patch_pcpm_pallas(plan, g_new, delta):
 # ---------------------------------------------------------------------------
 for _backend in (
     Backend("pdpr", _build_pdpr, _spmv_pdpr, uses_gather_block=True,
-            patch_plan=_patch_pdpr),
+            patch_plan=_patch_pdpr, supports_push_query=True),
     Backend("bvgas", _build_bvgas, _spmv_bvgas, uses_gather_block=True,
-            phase_fns=_phases_bvgas, patch_plan=_patch_bvgas),
+            phase_fns=_phases_bvgas, patch_plan=_patch_bvgas,
+            supports_push_query=True),
     Backend("pcpm", _build_pcpm, _spmv_pcpm, uses_gather_block=True,
-            phase_fns=_phases_pcpm, patch_plan=_patch_pcpm),
+            phase_fns=_phases_pcpm, patch_plan=_patch_pcpm,
+            supports_push_query=True),
     Backend("pcpm_pallas", _build_pcpm_pallas, _spmv_pcpm_pallas,
-            patch_plan=_patch_pcpm_pallas),
+            patch_plan=_patch_pcpm_pallas, supports_push_query=True),
     # pcpm_sharded has no patcher: shard-local receive buffers and the
     # all-to-all send schedule are global layouts (a delta anywhere can
     # grow any shard's wire stream), so deltas fall back to a full
-    # rebuild — the residual-push warm start still applies.
+    # rebuild — the residual-push warm start still applies.  No push
+    # queries either: the (n,) query state is single-device.
     Backend("pcpm_sharded", _build_pcpm_sharded, _spmv_pcpm_sharded,
             supports_sharding=True, uses_gather_block=True),
 ):

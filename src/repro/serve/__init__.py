@@ -2,10 +2,12 @@ from .engine import PageRankServer, ServeEngine, Request
 from .scheduler import (SlotScheduler, GraphRegistry, Query,
                         QueryResult)
 from .metrics import ServeMetrics, QueryTrace
-from .topk import make_slot_topk, topk_ranks
+from .push import PushQueryEngine, PushResult
+from .topk import host_topk, make_slot_topk, topk_ranks
 
 __all__ = [
     "PageRankServer", "ServeEngine", "Request",
     "SlotScheduler", "GraphRegistry", "Query", "QueryResult",
-    "ServeMetrics", "QueryTrace", "make_slot_topk", "topk_ranks",
+    "ServeMetrics", "QueryTrace", "PushQueryEngine", "PushResult",
+    "host_topk", "make_slot_topk", "topk_ranks",
 ]

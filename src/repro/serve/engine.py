@@ -58,6 +58,16 @@ def _sharded_inv_degree(g: Graph, engine: SpMVEngine, vec_sharding):
 def _normalize_teleport(host: np.ndarray) -> np.ndarray:
     """Validate and column-normalize teleport distributions (a single
     (n,) vector or (n, batch) columns)."""
+    if host.ndim == 1:
+        # scalar fast path — this sits on the per-query submit path of
+        # the push route (thousands of queries/sec), where the array
+        # variant's extra reduction passes are measurable
+        s = float(host.sum())
+        if not (s > 0.0 and np.isfinite(s)):   # NaN fails s > 0.0
+            raise ValueError(
+                "every seed column must be finite with positive mass; "
+                f"got column sums {s!r}")
+        return host / np.float32(s)
     sums = host.sum(axis=0)
     if not (np.isfinite(sums).all() and np.all(sums > 0)):
         raise ValueError(

@@ -80,7 +80,13 @@ class ServeMetrics:
         self.traces[uid] = QueryTrace(uid, self.clock())
 
     def admitted(self, uid: int) -> None:
-        self.traces[uid].t_admit = self.clock()
+        """Record FIRST admission only: a quarantine re-admission (or
+        a push fallback re-entering the stepper) re-runs the admit
+        path, and letting it overwrite ``t_admit`` would under-report
+        queue wait exactly for the queries that needed retries."""
+        tr = self.traces[uid]
+        if tr.t_admit is None:
+            tr.t_admit = self.clock()
 
     def completed(self, uid: int, *, iterations: int, converged: bool,
                   error: Optional[str] = None,

@@ -25,6 +25,15 @@ the cheap unit of work doing the heavy lifting:
 - ``GraphRegistry`` holds compiled schedulers for several graphs
   (warm-loaded via graphs/io.py) so one server process serves many
   graphs.
+- Forward-push routing (DESIGN.md §11, serve/push.py): with
+  ``route="auto"`` the scheduler answers loose-tolerance top-k
+  personalized queries INLINE at ``submit`` through the forward-push
+  query backend — only backends with ``supports_push_query`` — and
+  never occupies a slot for them; a push that stops above its bound
+  falls back to the stepper warm-started at the push estimate, its
+  sweeps charged against the iteration budget.  The stepper is never
+  touched by push traffic, so ``trace_count`` stays 1 across
+  interleaved routes.
 
 Resilience (DESIGN.md §10, ``repro.reliability``): a ``ResilienceConfig``
 adds deadline/priority admission over a bounded queue (overload sheds
@@ -91,6 +100,14 @@ class Query:
     priority: int = 0
     degraded: bool = False        # tolerance loosened / served approx
     retries: int = 0              # clean-seed re-admissions so far
+    # iterations already consumed by earlier admissions (quarantine
+    # retries) or by a push attempt — ``max_iters`` bounds the TOTAL
+    # work across all of them, and QueryResult.iterations reports it
+    iters_done: int = 0
+    # one-shot warm start: a push fallback's estimate, written over
+    # the admitted column then cleared (a later quarantine retry must
+    # re-admit the clean seed, not the possibly-poisoned estimate)
+    warm_start: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -98,7 +115,10 @@ class QueryResult:
     uid: int
     iterations: int
     converged: bool
-    residual: float
+    # last measured stopping residual; None when the query finished
+    # before any residual readback (rejection, expiry, max_iters=0,
+    # failure) — never a sentinel masquerading as data
+    residual: Optional[float]
     latency_s: float
     ranks: Optional[np.ndarray] = None        # (n,) unless top_k set
     top_ids: Optional[np.ndarray] = None      # (k,) int32
@@ -123,9 +143,14 @@ class SlotScheduler:
                  engine: SpMVEngine | None = None,
                  metrics: ServeMetrics | None = None,
                  resilience: ResilienceConfig | None = None,
-                 fault_injector=None):
+                 fault_injector=None, route: str = "auto",
+                 push_tol: float = 1e-4, push_mode: str = "auto",
+                 push_max_sweeps: int = 64):
         if slots < 1:
             raise ValueError(f"need at least one slot; got {slots}")
+        if route not in ("auto", "push", "stepper"):
+            raise ValueError(f"route must be 'auto', 'push' or "
+                             f"'stepper'; got {route!r}")
         validate_graph(g)
         self.g = g
         self.n = g.num_nodes
@@ -145,6 +170,20 @@ class SlotScheduler:
         self.trace_count = 0          # stepper traces — must stay 1
         self.admit_trace_count = 0    # column-admit traces — must stay 1
         self.rebind_count = 0         # plan swaps (apply_delta)
+        # forward-push query routing (serve/push.py, DESIGN.md §11):
+        # route="auto" sends loose-tolerance top-k personalized queries
+        # to push, everything else to the stepper; push_tol is the
+        # loose/tight boundary.  The engine is built lazily on first
+        # use and dropped on apply_delta (it indexes the graph's CSR).
+        self.route = route
+        self.push_tol = float(push_tol)
+        self.push_mode = push_mode
+        # push never burns the whole iteration budget: capping its
+        # sweeps leaves the fallback stepper real budget to finish a
+        # query the push couldn't close (geometric contraction means
+        # ~log(tol)/log(d) sweeps suffice at the routed tolerances)
+        self.push_max_sweeps = int(push_max_sweeps)
+        self._push = None
 
         B = slots
         if self.sharded:
@@ -336,13 +375,14 @@ class SlotScheduler:
         self.g = g_new
         self.engine = new_engine
         self._step_c, self._inv_deg = step_c, inv_deg
+        self._push = None             # push state indexes the old CSR
         self.rebind_count += 1
 
     # ------------------------------------------------------------ intake
     def submit(self, seeds: np.ndarray | None = None, *,
                top_k: int | None = None, tol: float = 1e-6,
                max_iters: int = 100, deadline_s: float | None = None,
-               priority: int = 0) -> int:
+               priority: int = 0, route: str | None = None) -> int:
         """Enqueue one query; returns its uid.  ``seeds`` is an (n,)
         teleport distribution (need not be normalized — it is), or None
         for uniform teleport.  ``tol=0`` runs exactly ``max_iters``
@@ -350,6 +390,17 @@ class SlotScheduler:
         (queue wait + service; defaults to
         ``resilience.default_deadline_s``); ``priority`` orders
         admission, higher first.
+
+        ``route`` overrides the scheduler's default: ``"auto"`` serves
+        loose-tolerance (``tol >= push_tol``) top-k personalized
+        queries INLINE through the forward-push backend (DESIGN.md
+        §11) and queues everything else for the stepper; ``"push"``
+        forces push (raising if the configuration can't support it);
+        ``"stepper"`` never pushes.  A push that exhausts its budget
+        above the stopping bound falls back: the query is queued for
+        the stepper warm-started at the push estimate, its consumed
+        sweeps counted against ``max_iters``
+        (``counters["push_fallbacks"]``).
 
         When the admission queue is bounded (``resilience.max_queue``)
         and full, the query is REJECTED EXPLICITLY: it completes
@@ -361,12 +412,22 @@ class SlotScheduler:
         if top_k is not None and not 1 <= top_k <= self.n:
             raise ValueError(f"top_k must be in [1, {self.n}]; "
                              f"got {top_k}")
+        route = self.route if route is None else route
+        if route not in ("auto", "push", "stepper"):
+            raise ValueError(f"route must be 'auto', 'push' or "
+                             f"'stepper'; got {route!r}")
         seed = None
         if seeds is not None:
             seed = _normalize_teleport(
                 np.asarray(seeds, dtype=np.float32).reshape(self.n))
             if self._n_pad != self.n:
                 seed = np.pad(seed, (0, self._n_pad - self.n))
+        if route == "push":
+            self._check_push_request(seed, tol, max_iters)
+        use_push = (route == "push"
+                    or (route == "auto"
+                        and self._push_eligible(seed, top_k, tol,
+                                                max_iters)))
         if deadline_s is None:
             deadline_s = self.resilience.default_deadline_s
         deadline = (self.clock() + deadline_s
@@ -375,6 +436,8 @@ class SlotScheduler:
         q = Query(uid, seed, top_k, float(tol), int(max_iters),
                   deadline, int(priority))
         self.metrics.submitted(uid)
+        if use_push and self._serve_push(q):
+            return uid                # answered inline, never queued
         cap = self.resilience.max_queue
         if cap is not None and len(self._queue) >= cap:
             self.metrics.incr("rejected")
@@ -383,6 +446,93 @@ class SlotScheduler:
             return uid
         self._queue.append(q)
         return uid
+
+    # --------------------------------------------------- push routing
+    def _push_supported(self) -> bool:
+        return (not self.sharded
+                and self.engine.backend.supports_push_query
+                and self.dangling == "none")
+
+    def _push_eligible(self, seed, top_k, tol, max_iters) -> bool:
+        """route="auto" rule: push serves single-seed TOP-K queries at
+        LOOSE tolerance — the regime where expanding one seed's
+        frontier beats a full (n, B) iteration; full-vector and
+        tight-tolerance queries keep the stepper's accuracy/amortized
+        cost."""
+        return (self._push_supported()
+                and seed is not None and top_k is not None
+                and 0.0 < self.push_tol <= tol
+                and max_iters > 0)
+
+    def _check_push_request(self, seed, tol, max_iters) -> None:
+        """route="push" validation — raises BEFORE a uid is allocated,
+        so an unservable explicit request never produces a trace."""
+        if self.sharded:
+            raise ValueError("route='push' is single-device (the push "
+                             "state is one (n,) vector)")
+        if not self.engine.backend.supports_push_query:
+            raise ValueError(
+                f"backend {self.engine.method!r} does not support push "
+                "queries (supports_push_query=False)")
+        if self.dangling != "none":
+            raise ValueError("route='push' requires dangling='none'; "
+                             f"got {self.dangling!r}")
+        if seed is None:
+            raise ValueError("route='push' needs a seed: push expands "
+                             "a personalized frontier (uniform "
+                             "teleport is a full-vector solve)")
+        if tol <= 0 or max_iters <= 0:
+            raise ValueError("route='push' needs tol > 0 and "
+                             "max_iters > 0 (fixed-budget mode is the "
+                             "stepper's)")
+
+    def _push_engine(self):
+        if self._push is None:
+            from .push import PushQueryEngine
+            self._push = PushQueryEngine(
+                self.g, self.engine, damping=self.damping,
+                dangling=self.dangling, mode=self.push_mode)
+        return self._push
+
+    def _serve_push(self, q: Query) -> bool:
+        """Answer ``q`` inline through the push backend.  Returns True
+        when a terminal result was produced; False falls through to
+        the stepper queue — with the push estimate as a warm start and
+        the consumed sweeps charged against the budget when the push
+        ran but stopped above its bound (honest fallback, counted)."""
+        self.metrics.admitted(q.uid)   # service starts now, no queue
+        try:
+            res = self._push_engine().query(
+                q.seed[:self.n], tol=q.tol,
+                max_sweeps=min(q.max_iters, self.push_max_sweeps),
+                top_k=q.top_k)
+        except Exception:             # noqa: BLE001 — fall back, count
+            self.metrics.incr("push_failures")
+            return False
+        if not res.converged:
+            self.metrics.incr("push_fallbacks")
+            q.iters_done = res.sweeps
+            est = res.estimate
+            if self._n_pad != self.n:
+                est = np.pad(est, (0, self._n_pad - self.n))
+            q.warm_start = est
+            return False
+        self.metrics.incr("push_served")
+        self.metrics.completed(q.uid, iterations=res.sweeps,
+                               converged=True, degraded=q.degraded)
+        if q.top_k is not None:
+            result = QueryResult(
+                q.uid, res.sweeps, True, res.residual,
+                self.metrics.traces[q.uid].latency_s,
+                top_ids=res.top_ids, top_scores=res.top_scores,
+                degraded=q.degraded)
+        else:
+            result = QueryResult(
+                q.uid, res.sweeps, True, res.residual,
+                self.metrics.traces[q.uid].latency_s,
+                ranks=res.estimate, degraded=q.degraded)
+        self.completed.append(result)
+        return True
 
     @property
     def active_slots(self) -> int:
@@ -406,7 +556,7 @@ class SlotScheduler:
         self.metrics.completed(q.uid, iterations=0, converged=False,
                                error=error, degraded=q.degraded)
         self.completed.append(QueryResult(
-            q.uid, 0, False, -1.0,
+            q.uid, 0, False, None,
             self.metrics.traces[q.uid].latency_s, error=error,
             degraded=q.degraded))
 
@@ -455,15 +605,26 @@ class SlotScheduler:
         self._pr, self._base = self._admit_c(
             self._pr, self._base, seed_dev,
             self._put_small(np.int32(slot)))
+        if q.warm_start is not None:
+            # push-fallback estimate overwrites the column (base stays
+            # the seed's, so the iteration targets the same fixed
+            # point); one-shot — a quarantine retry re-admits clean
+            warm = jnp.asarray(q.warm_start)
+            if self.sharded:
+                warm = jax.device_put(warm, self._vec_sharding)
+            self._pr = self._restore_c(self._pr, warm,
+                                       self._put_small(np.int32(slot)))
+            q.warm_start = None
         self._slot_query[slot] = q
-        self._active[slot] = q.max_iters > 0
-        self._iters[slot] = 0
+        self._active[slot] = q.max_iters > q.iters_done
+        self._iters[slot] = q.iters_done
         self._tol[slot] = q.tol
         self._max_iters[slot] = q.max_iters
         self._slot_res[slot] = -1.0
         self.metrics.admitted(q.uid)
-        if q.max_iters == 0:          # degenerate: serve the seed as-is
-            self._finish(slot, q, residual=-1.0)
+        if q.max_iters <= q.iters_done:
+            # degenerate: no budget left — serve the column as-is
+            self._finish(slot, q, residual=None)
 
     def _admit_from_queue(self) -> int:
         admitted = 0
@@ -534,13 +695,26 @@ class SlotScheduler:
                 self._slot_res[slot] = float(res[slot])
             if active[slot]:
                 continue
-            self._finish(slot, q, residual=float(res[slot]))
+            self._finish(slot, q, residual=(
+                float(self._slot_res[slot])
+                if self._slot_res[slot] >= 0.0 else None))
         self._active = active & np.array(
             [q is not None for q in self._slot_query])
         for slot in requeue:
-            # clean-seed re-admission overwrites the poisoned column
+            # clean-seed re-admission overwrites the poisoned column;
+            # the iterations the poisoned run burned stay charged
+            # against the query's budget (and reported), so retries
+            # can never exceed max_iters total work
+            q = self._slot_query[slot]
+            q.iters_done = int(self._iters[slot])
+            if q.iters_done >= q.max_iters:
+                self._fail_slot(
+                    slot, q,
+                    error=f"quarantined: iteration budget exhausted "
+                          f"after {q.retries} retries")
+                continue
             self.metrics.incr("requeued")
-            self._admit(slot, self._slot_query[slot])
+            self._admit(slot, q)
         self._sweep_deadlines()
         return len(self.completed) - before
 
@@ -603,7 +777,11 @@ class SlotScheduler:
                 continue
             self.metrics.incr("deadline_hits")
             q.degraded = True
-            self._finish(slot, q, residual=float(self._slot_res[slot]))
+            # before the slot's first residual readback there is no
+            # measured residual — surface None, never the -1.0 sentinel
+            self._finish(slot, q, residual=(
+                float(self._slot_res[slot])
+                if self._slot_res[slot] >= 0.0 else None))
 
     def _fail_slot(self, slot: int, q: Query, *, error: str) -> None:
         """Explicit terminal failure of an in-flight query: no ranks
@@ -612,15 +790,18 @@ class SlotScheduler:
         self.metrics.completed(q.uid, iterations=it, converged=False,
                                error=error, degraded=q.degraded)
         self.completed.append(QueryResult(
-            q.uid, it, False, float("nan"),
+            q.uid, it, False, None,
             self.metrics.traces[q.uid].latency_s, error=error,
             degraded=q.degraded))
         self._slot_query[slot] = None
         self._active[slot] = False
 
-    def _finish(self, slot: int, q: Query, *, residual: float) -> None:
+    def _finish(self, slot: int, q: Query, *,
+                residual: Optional[float]) -> None:
         it = int(self._iters[slot])
-        converged = 0.0 <= residual < q.tol
+        # a missing residual (None) can never read as converged — the
+        # old -1.0 sentinel couldn't either, but only by luck of sign
+        converged = residual is not None and 0.0 <= residual < q.tol
         self.metrics.completed(q.uid, iterations=it, converged=converged,
                                degraded=q.degraded)
         if converged:

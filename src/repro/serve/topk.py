@@ -17,6 +17,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def make_slot_topk(num_nodes: int):
@@ -43,3 +44,32 @@ def topk_ranks(pr, k):
     """Standalone top-k over a single (n,) rank vector."""
     scores, ids = jax.lax.top_k(pr, k)
     return ids.astype(jnp.int32), scores
+
+
+def host_topk(ranks: np.ndarray, k: int):
+    """Host-side top-k over an (n,) numpy estimate — the push query
+    path's twin of ``slot_topk`` (push answers live on the host, so
+    shipping them to the device just to rank them would re-pay the
+    transfer the push path exists to avoid).  Ties break like
+    ``jax.lax.top_k``: equal scores order by lower id."""
+    ranks = np.asarray(ranks)
+    n = ranks.shape[0]
+    k = min(int(k), n)
+    if k == n:
+        idx = np.arange(n)
+    else:
+        # argpartition picks an ARBITRARY member of a score tie on the
+        # k-th boundary; lax.top_k takes the lowest id.  Repair only
+        # when a tie actually crosses the boundary — the extra O(n)
+        # passes would otherwise dominate this serving hot path.
+        idx = np.argpartition(ranks, n - k)[n - k:]
+        sel = ranks[idx]
+        kth = sel.min()
+        if (np.count_nonzero(ranks == kth)
+                > np.count_nonzero(sel == kth)):
+            strict = idx[sel > kth]
+            ties = np.nonzero(ranks == kth)[0]  # ascending id order
+            idx = np.concatenate([strict, ties[:k - strict.size]])
+    order = np.lexsort((idx, -ranks[idx]))
+    ids = idx[order].astype(np.int32)
+    return ids, ranks[ids].astype(np.float32)

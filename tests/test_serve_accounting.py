@@ -1,0 +1,262 @@
+"""Regression suite for the serve-layer accounting bugs fixed in the
+push-backend PR (DESIGN.md §11), plus an exactly-once terminal audit.
+
+The two named bugs:
+
+1. **Retry accounting** — quarantine re-admission used to call the
+   admit path unconditionally, which (a) overwrote ``t_admit`` so the
+   retried query's queue wait vanished, and (b) reset the slot's
+   iteration counter so a retried query could burn
+   ``(max_retries + 1) x max_iters`` device work while reporting only
+   the final run's iterations.  Now ``t_admit`` is first-wins and
+   consumed iterations carry across re-admissions: ``max_iters``
+   bounds TOTAL work and ``QueryResult.iterations`` reports it.
+
+2. **Sentinel leak** — a deadline lapsing after a quarantine
+   re-admission but before the slot's first residual readback used to
+   surface the pool-init sentinel ``residual = -1.0`` as if it were a
+   measurement.  Now a query finishing without a readback reports
+   ``residual is None``.
+
+The audit class sweeps every terminal path (served, push-served,
+rejected, expired, deadline-degraded, quarantine-failed, max_iters=0)
+and asserts each uid resolves exactly once with a trace consistent
+with its result.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.graphs import generators
+from repro.reliability import (FaultInjector, FaultPlan, FaultSpec,
+                               ResilienceConfig)
+from repro.serve import SlotScheduler
+
+SMALL = dict(method="pcpm", part_size=64, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generators.rmat(8, 8, seed=1)
+
+
+def _seed(g, at=3):
+    s = np.zeros(g.num_nodes, np.float32)
+    s[at] = 1.0
+    s[(at * 7 + 1) % g.num_nodes] = 1.0
+    return s
+
+
+def _fake_clock(sch):
+    t = [0.0]
+    sch.metrics.clock = lambda: t[0]
+    sch.clock = sch.metrics.clock
+    return t
+
+
+def _poisoned(g, *, max_retries=1, **kw):
+    inj = FaultInjector(FaultPlan.of([FaultSpec("nan_slot", step=2,
+                                                slot=0)]))
+    return SlotScheduler(
+        g, slots=1, fault_injector=inj,
+        resilience=ResilienceConfig(max_retries=max_retries),
+        **SMALL, **kw)
+
+
+@pytest.fixture(scope="module")
+def clean_iters(g):
+    """Iterations the reference query needs fault-free."""
+    sch = SlotScheduler(g, slots=1, **SMALL)
+    u = sch.submit(_seed(g), tol=1e-6, max_iters=300)
+    sch.run_until_drained()
+    r = {r.uid: r for r in sch.completed}[u]
+    assert r.converged
+    return r.iterations
+
+
+class TestRetryAccounting:
+    def test_budget_spans_retries(self, g, clean_iters):
+        """A quarantine retry must NOT get a fresh ``max_iters``: the
+        poisoned run's iterations stay charged, so with max_iters set
+        to exactly the clean-run cost the retried query runs out of
+        budget and honestly reports non-convergence at max_iters —
+        pre-fix it silently burned ~2x the budget and converged."""
+        sch = _poisoned(g)
+        u = sch.submit(_seed(g), tol=1e-6, max_iters=clean_iters)
+        sch.run_until_drained()
+        r = {r.uid: r for r in sch.completed}[u]
+        assert sch.metrics.counters["quarantined"] == 1
+        assert sch.metrics.counters["requeued"] == 1
+        assert not r.converged
+        assert r.iterations == clean_iters       # total, incl. burned
+        assert sch.metrics.traces[u].iterations == clean_iters
+
+    def test_retry_converges_within_enlarged_budget(self, g,
+                                                    clean_iters):
+        """Same fault with budget = clean cost + burned iterations:
+        the retry converges, and the reported count is the TOTAL
+        device work (burned + clean rerun), not just the rerun."""
+        sch = _poisoned(g)
+        u = sch.submit(_seed(g), tol=1e-6, max_iters=300)
+        sch.run_until_drained()
+        r = {r.uid: r for r in sch.completed}[u]
+        assert r.converged and r.error is None
+        burned = r.iterations - clean_iters
+        assert burned >= SMALL["chunk"]          # >= 1 poisoned chunk
+        assert sch.trace_count == 1
+
+    def test_budget_exhausted_fails_explicitly(self, g, clean_iters):
+        """If the poisoned run already consumed the whole budget there
+        is nothing left to retry with — the query must fail crisply,
+        not be re-admitted for zero iterations."""
+        sch = _poisoned(g)
+        # chunk + 1: the clean first chunk takes 4, the poisoned step
+        # burns the single remaining iteration -> nothing left to retry
+        u = sch.submit(_seed(g), tol=1e-6,
+                       max_iters=SMALL["chunk"] + 1)
+        sch.run_until_drained()
+        r = {r.uid: r for r in sch.completed}[u]
+        assert r.error is not None and "budget exhausted" in r.error
+        assert not r.converged
+        assert sch.metrics.counters["requeued"] == 0
+
+    def test_queue_wait_first_wins(self, g):
+        """``t_admit`` records the FIRST admission: a retry at t=1.0
+        must not erase the queue wait measured at t=0."""
+        sch = _poisoned(g)
+        t = _fake_clock(sch)
+        u = sch.submit(_seed(g), tol=1e-6, max_iters=300)
+        sch.step()                     # clean chunk at t=0
+        t[0] = 1.0                     # wall time passes mid-flight
+        sch.run_until_drained()        # poison fires, retry re-admits
+        tr = sch.metrics.traces[u]
+        assert sch.metrics.counters["requeued"] == 1
+        assert tr.queue_wait_s == 0.0  # pre-fix: 1.0 (re-admit time)
+        r = {r.uid: r for r in sch.completed}[u]
+        assert r.converged
+
+
+class TestResidualSentinel:
+    def test_deadline_before_first_readback_reports_none(self, g):
+        """Deadline lapses in the same step() as a quarantine
+        re-admission — the slot's residual buffer holds the -1.0 init
+        sentinel because the re-admitted run never read one back.  The
+        result must say ``residual is None`` (and therefore not
+        converged), never leak the sentinel."""
+        sch = _poisoned(g)
+        t = _fake_clock(sch)
+        u = sch.submit(_seed(g), tol=1e-6, max_iters=300,
+                       deadline_s=0.5)
+        sch.step()                     # clean chunk, residual readback
+        t[0] = 1.0                     # deadline passes mid-flight
+        sch.step()                     # poison -> requeue -> re-admit
+        #                                -> deadline sweep, same step
+        r = {r.uid: r for r in sch.completed}[u]
+        assert sch.metrics.counters["deadline_hits"] == 1
+        assert r.residual is None      # pre-fix: -1.0
+        assert r.degraded and not r.converged and r.error is None
+        assert r.top_ids is None and r.ranks is not None
+
+    def test_zero_budget_submit_reports_none(self, g):
+        """max_iters=0 serves the seed column as-is at admission: no
+        readback ever happened, so residual is None, converged False,
+        and the ranks are the (normalized) seed itself."""
+        sch = SlotScheduler(g, slots=1, **SMALL)
+        s = _seed(g)
+        u = sch.submit(s, tol=1e-6, max_iters=0)
+        sch.run_until_drained()
+        r = {r.uid: r for r in sch.completed}[u]
+        assert r.residual is None and not r.converged
+        assert r.error is None and r.iterations == 0
+        np.testing.assert_allclose(r.ranks, s / s.sum(), atol=1e-7)
+
+    def test_quarantine_failure_reports_none(self, g):
+        """max_retries=0: the poisoned query fails explicitly and the
+        result carries residual None (the column is poisoned — there
+        is no honest residual to report), never NaN."""
+        sch = _poisoned(g, max_retries=0)
+        u = sch.submit(_seed(g), tol=1e-6, max_iters=300)
+        sch.run_until_drained()
+        r = {r.uid: r for r in sch.completed}[u]
+        assert r.error is not None and "quarantined" in r.error
+        assert r.residual is None      # pre-fix: nan
+        assert not r.converged
+
+
+class TestTerminalAudit:
+    def _audit(self, sch, uids):
+        """Every uid resolves exactly once, trace and result agree."""
+        counts = collections.Counter(r.uid for r in sch.completed)
+        assert set(counts) == set(uids)
+        assert all(c == 1 for c in counts.values())
+        by_uid = {r.uid: r for r in sch.completed}
+        for uid in uids:
+            r, tr = by_uid[uid], sch.metrics.traces[uid]
+            assert tr.t_done is not None
+            assert tr.iterations == r.iterations
+            assert tr.converged == r.converged
+            assert tr.error == r.error
+            assert tr.degraded == r.degraded
+            if r.error is not None:
+                assert not r.converged
+                assert r.ranks is None and r.top_ids is None
+            if r.converged:
+                assert r.residual is not None and r.residual >= 0.0
+        return by_uid
+
+    def test_chaos_workload_resolves_every_uid(self, g):
+        """Mixed workload across every terminal path: push-served,
+        stepper-served, quarantine retry, explicit rejection (queue
+        cap), degenerate max_iters=0 — one result per uid, consistent
+        traces, consistent counters."""
+        inj = FaultInjector(FaultPlan.of([FaultSpec("nan_slot", step=3,
+                                                    slot=0)]))
+        sch = SlotScheduler(
+            g, slots=2, fault_injector=inj,
+            resilience=ResilienceConfig(max_retries=1, max_queue=4),
+            **SMALL)
+        uids = []
+        # 2 push-served inline (loose tol + top_k) — never queue
+        for i in range(2):
+            uids.append(sch.submit(_seed(g, at=i), top_k=8, tol=1e-2,
+                                   max_iters=300))
+        # 1 degenerate zero-budget
+        uids.append(sch.submit(_seed(g, at=5), tol=1e-6, max_iters=0))
+        # 8 stepper queries: 2 slots + queue cap 4 -> some rejected
+        for i in range(8):
+            uids.append(sch.submit(_seed(g, at=10 + i), tol=1e-6,
+                                   max_iters=300))
+        sch.run_until_drained()
+        by_uid = self._audit(sch, uids)
+        c = sch.metrics.counters
+        assert c["push_served"] == 2
+        assert c["quarantined"] >= 1
+        rejected = [r for r in by_uid.values()
+                    if r.error and "rejected" in r.error]
+        assert c["rejected"] == len(rejected) > 0
+        served = [r for r in by_uid.values()
+                  if r.error is None and r.iterations > 0]
+        assert all(r.converged for r in served)
+        assert sch.trace_count == 1
+        assert sch.admit_trace_count == 1
+
+    def test_expiry_and_deadline_paths_audit(self, g):
+        """Queue expiry and in-flight deadline degradation both leave
+        exactly-once, trace-consistent terminals."""
+        sch = SlotScheduler(g, slots=1,
+                            resilience=ResilienceConfig(max_queue=8),
+                            **SMALL)
+        t = _fake_clock(sch)
+        u_run = sch.submit(_seed(g, at=1), tol=1e-6, max_iters=300,
+                           deadline_s=0.5)
+        u_exp = sch.submit(_seed(g, at=2), tol=1e-6, max_iters=300,
+                           deadline_s=0.5)
+        sch.step()                     # u_run admitted, u_exp queued
+        t[0] = 1.0                     # both deadlines pass
+        sch.run_until_drained()
+        by_uid = self._audit(sch, [u_run, u_exp])
+        assert "deadline" in by_uid[u_exp].error
+        assert by_uid[u_run].degraded and by_uid[u_run].error is None
+        assert sch.metrics.counters["expired"] == 1
+        assert sch.metrics.counters["deadline_hits"] == 1

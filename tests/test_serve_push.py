@@ -1,0 +1,272 @@
+"""Parity + routing suite for the forward-push personalized-query
+backend (serve/push.py, DESIGN.md §11).
+
+The documented accuracy contract: a push (or stepper) run stopped at
+tolerance ``tol`` is within ``tol * d/(1-d)`` L1 of the exact
+personalized fixed point.  Every parity check here asserts against
+that bound — push vs a dense f64 oracle, push vs the masked-stepper
+route, host vs device push — across the seed shapes that exercise
+different code paths (hub, leaf, dangling sink, uniform).
+
+Routing invariants: push queries are served inline and never touch
+the stepper, so ``trace_count`` / ``admit_trace_count`` stay 1 when
+routes interleave; a push that stops above its bound falls back to
+the stepper warm-started at the estimate with its sweeps charged
+against the budget.
+"""
+import numpy as np
+import pytest
+
+from repro.core.backends import get_backend
+from repro.core.spmv import SpMVEngine
+from repro.graphs import generators
+from repro.serve import SlotScheduler
+from repro.serve.push import PushQueryEngine
+from repro.serve.topk import host_topk
+
+DAMPING = 0.85
+SMALL = dict(method="pcpm", part_size=64, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generators.rmat(10, 8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def engine(g):
+    return SpMVEngine(g, method="pcpm", part_size=64)
+
+
+@pytest.fixture(scope="module")
+def dense_w(g):
+    """Dense damped-free transition operator W[v, u] = 1/deg[u]."""
+    n = g.num_nodes
+    W = np.zeros((n, n), np.float64)
+    np.add.at(W, (g.dst, g.src),
+              1.0 / np.maximum(g.out_degree, 1)[g.src])
+    return W
+
+
+def personalized_oracle(W, seed, *, damping=DAMPING, iters=3000,
+                        tol=1e-13):
+    """f64 fixed point of x = (1-d) s + d W x (dangling='none')."""
+    s = seed.astype(np.float64)
+    s = s / s.sum()
+    x = s.copy()
+    base = (1.0 - damping) * s
+    for _ in range(iters):
+        x2 = base + damping * (W @ x)
+        if np.abs(x2 - x).sum() < tol:
+            break
+        x = x2
+    return x2
+
+
+def seed_catalog(g):
+    """One-hot hub / leaf / dangling seeds + the uniform vector."""
+    n = g.num_nodes
+    deg = np.asarray(g.out_degree)
+    hub = int(np.argmax(deg))
+    nonzero = np.nonzero(deg > 0)[0]
+    leaf = int(nonzero[np.argmin(deg[nonzero])])
+    sinks = np.nonzero(deg == 0)[0]
+    out = {}
+    for name, node in (("hub", hub), ("leaf", leaf)):
+        s = np.zeros(n, np.float32)
+        s[node] = 1.0
+        out[name] = s
+    if sinks.size:
+        s = np.zeros(n, np.float32)
+        s[sinks[0]] = 1.0
+        out["dangling"] = s
+    out["uniform"] = np.full(n, 1.0 / n, np.float32)
+    return out
+
+
+class TestPushParity:
+    @pytest.mark.parametrize("tol", [1e-2, 1e-3, 1e-4])
+    def test_host_push_vs_oracle(self, g, engine, dense_w, tol):
+        eng = PushQueryEngine(g, engine)
+        bound = tol * DAMPING / (1.0 - DAMPING) + 1e-5  # f32 slack
+        for name, seed in seed_catalog(g).items():
+            res = eng.query(seed, tol=tol, max_sweeps=400)
+            assert res.converged, name
+            oracle = personalized_oracle(dense_w, seed)
+            err = float(np.abs(res.estimate - oracle).sum())
+            assert err <= bound, (name, tol, err, bound)
+
+    def test_device_push_matches_host(self, g, engine, dense_w):
+        host = PushQueryEngine(g, engine, mode="host")
+        dev = PushQueryEngine(g, engine, mode="device")
+        for name, seed in seed_catalog(g).items():
+            rh = host.query(seed, tol=1e-3, max_sweeps=400)
+            rd = dev.query(seed, tol=1e-3, max_sweeps=400)
+            assert rh.converged and rd.converged, name
+            oracle = personalized_oracle(dense_w, seed)
+            bound = 1e-3 * DAMPING / (1.0 - DAMPING) + 1e-5
+            assert np.abs(rd.estimate - oracle).sum() <= bound, name
+            # same fixed point, independent stopping points
+            assert np.abs(rd.estimate - rh.estimate).sum() <= 2 * bound
+
+    def test_dangling_seed_exact_in_zero_sweeps(self, g, engine):
+        """A sink's mass never propagates: the push answers with the
+        closed form (1-d)*seed at the sink, exactly, without a single
+        sweep."""
+        deg = np.asarray(g.out_degree)
+        sinks = np.nonzero(deg == 0)[0]
+        assert sinks.size, "fixture graph must have dangling nodes"
+        s = np.zeros(g.num_nodes, np.float32)
+        s[sinks[0]] = 1.0
+        res = PushQueryEngine(g, engine).query(s, tol=1e-3)
+        assert res.sweeps == 0 and res.converged
+        expect = np.zeros(g.num_nodes, np.float32)
+        expect[sinks[0]] = 1.0 - DAMPING
+        np.testing.assert_allclose(res.estimate, expect, atol=1e-7)
+
+    def test_push_vs_stepper_route(self, g):
+        """Same query down both routes lands within 2x the documented
+        bound of each other (each is within one bound of the fixed
+        point)."""
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        tol = 1e-3
+        for seed in seed_catalog(g).values():
+            up = sch.submit(seed, tol=tol, max_iters=400, route="push")
+            us = sch.submit(seed, tol=tol, max_iters=400,
+                            route="stepper")
+            sch.run_until_drained()
+            out = {r.uid: r for r in sch.completed}
+            rp, rs = out[up], out[us]
+            assert rp.converged and rs.converged
+            err = float(np.abs(rp.ranks - rs.ranks).sum())
+            assert err <= 2 * tol * DAMPING / (1.0 - DAMPING) + 1e-5
+
+    def test_topk_id_agreement(self, g, engine, dense_w):
+        """Push top-k ids match the oracle's top-k, modulo ids whose
+        oracle score is within the error bound of the k-th score (a
+        genuine tie at the resolution the tolerance buys)."""
+        k, tol = 16, 1e-3
+        bound = tol * DAMPING / (1.0 - DAMPING)
+        eng = PushQueryEngine(g, engine)
+        for name, seed in seed_catalog(g).items():
+            res = eng.query(seed, tol=tol, top_k=k, max_sweeps=400)
+            oracle = personalized_oracle(dense_w, seed)
+            oracle_ids, oracle_scores = host_topk(oracle, k)
+            kth = oracle_scores[-1]
+            push_set, oracle_set = set(res.top_ids), set(oracle_ids)
+            for i in oracle_ids:
+                if oracle[i] > kth + 2 * bound:
+                    assert i in push_set, (name, int(i))
+            for i in res.top_ids:
+                if i not in oracle_set:
+                    assert oracle[i] >= kth - 2 * bound, (name, int(i))
+
+
+class TestPushRouting:
+    def test_interleaved_routes_zero_retrace(self, g):
+        sch = SlotScheduler(g, slots=4, **SMALL)
+        rng = np.random.default_rng(0)
+        n = g.num_nodes
+        uids = []
+        for i in range(24):
+            s = np.zeros(n, np.float32)
+            s[rng.integers(0, n)] = 1.0
+            tol = 1e-2 if i % 2 == 0 else 1e-6  # push / stepper mix
+            uids.append(sch.submit(s, top_k=8, tol=tol, max_iters=300))
+        sch.run_until_drained()
+        out = {r.uid: r for r in sch.completed}
+        assert len(out) == 24 and all(u in out for u in uids)
+        assert all(out[u].converged for u in uids)
+        assert sch.trace_count == 1
+        assert sch.admit_trace_count == 1
+        assert sch.metrics.counters["push_served"] == 12
+
+    def test_auto_routes_only_loose_topk_personalized(self, g):
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        n = g.num_nodes
+        s = np.zeros(n, np.float32)
+        s[3] = 1.0
+        sch.submit(s, top_k=8, tol=1e-3, max_iters=300)       # push
+        sch.submit(s, top_k=8, tol=1e-6, max_iters=300)       # tight
+        sch.submit(s, tol=1e-3, max_iters=300)                # full vec
+        sch.submit(None, top_k=8, tol=1e-3, max_iters=300)    # uniform
+        sch.run_until_drained()
+        assert sch.metrics.counters["push_served"] == 1
+        assert all(r.converged for r in sch.completed)
+
+    def test_fallback_resumes_on_stepper(self, g):
+        """A push stopped above its bound hands the query to the
+        stepper warm-started at the estimate: total iterations equal
+        the pure-stepper run's (the push sweeps ARE the first stepper
+        iterations), and the answer matches."""
+        n = g.num_nodes
+        s = np.zeros(n, np.float32)
+        s[5] = 1.0
+        sch = SlotScheduler(g, slots=2, push_max_sweeps=6, **SMALL)
+        up = sch.submit(s, top_k=8, tol=1e-6, max_iters=300,
+                        route="push")
+        sch.run_until_drained()
+        us = sch.submit(s, top_k=8, tol=1e-6, max_iters=300,
+                        route="stepper")
+        sch.run_until_drained()
+        out = {r.uid: r for r in sch.completed}
+        rp, rs = out[up], out[us]
+        assert sch.metrics.counters["push_fallbacks"] == 1
+        assert rp.converged and rs.converged
+        assert np.array_equal(rp.top_ids, rs.top_ids)
+        # warm start = identical iterates: the chunked stepper may
+        # overshoot by at most one chunk relative to the pure run
+        assert abs(rp.iterations - rs.iterations) <= SMALL["chunk"]
+        assert sch.trace_count == 1
+
+    def test_explicit_push_validation(self, g):
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        n = g.num_nodes
+        s = np.zeros(n, np.float32)
+        s[0] = 1.0
+        with pytest.raises(ValueError, match="needs a seed"):
+            sch.submit(None, tol=1e-3, route="push")
+        with pytest.raises(ValueError, match="tol > 0"):
+            sch.submit(s, tol=0.0, route="push")
+        with pytest.raises(ValueError, match="tol > 0"):
+            sch.submit(s, tol=1e-3, max_iters=0, route="push")
+        with pytest.raises(ValueError, match="route"):
+            sch.submit(s, tol=1e-3, route="bogus")
+        # a failed validation never allocates a uid / trace
+        assert len(sch.metrics.traces) == 0
+
+    def test_redistribute_routes_to_stepper(self, g):
+        sch = SlotScheduler(g, slots=2, dangling="redistribute",
+                            **SMALL)
+        s = np.zeros(g.num_nodes, np.float32)
+        s[0] = 1.0
+        with pytest.raises(ValueError, match="dangling"):
+            sch.submit(s, tol=1e-2, route="push")
+        u = sch.submit(s, top_k=8, tol=1e-2, max_iters=300)  # auto
+        sch.run_until_drained()
+        assert sch.metrics.counters["push_served"] == 0
+        assert {r.uid: r for r in sch.completed}[u].converged
+
+    def test_capability_flags(self):
+        assert get_backend("pcpm").supports_push_query
+        assert get_backend("pdpr").supports_push_query
+        assert get_backend("bvgas").supports_push_query
+        assert get_backend("pcpm_pallas").supports_push_query
+        assert not get_backend("pcpm_sharded").supports_push_query
+
+    def test_engine_rejects_redistribute(self, g, engine):
+        with pytest.raises(ValueError, match="dangling"):
+            PushQueryEngine(g, engine, dangling="redistribute")
+
+
+class TestHostTopk:
+    def test_matches_device_tiebreak(self):
+        import jax.numpy as jnp
+        from repro.serve.topk import topk_ranks
+        rng = np.random.default_rng(3)
+        # duplicate scores force the tie-break path
+        vals = rng.integers(0, 50, size=200).astype(np.float32) / 50.0
+        ids_h, sc_h = host_topk(vals, 17)
+        ids_d, sc_d = topk_ranks(jnp.asarray(vals), 17)
+        np.testing.assert_array_equal(ids_h, np.asarray(ids_d))
+        np.testing.assert_array_equal(sc_h, np.asarray(sc_d))
