@@ -1,0 +1,145 @@
+"""Locality relabeling, end to end through the PLAN layer.
+
+table5/table6 measure orderings by relabeling the graph by hand and
+rebuilding a PNG layout; this module measures the production path the
+ingest subsystem exposes — ``EngineConfig(reorder=...)`` — so the
+numbers include everything a user of ``repro.open`` gets: the plan
+built on the relabeled graph, the fused solver iterating in internal
+space, and the final gather back to original ids.
+
+Rows per dataset and ordering:
+
+- ``locality/<ds>/<ord>/r``     — achieved compression ratio r
+  (derived carries r and the gain over the unreordered plan);
+- ``locality/<ds>/<ord>/iter``  — WARM per-iteration wall time of the
+  fused 20-iteration solve (compile excluded; the honest per-iter
+  delta the reordering buys, or costs, at this scale).
+
+Standalone mode merges into BENCH_pagerank.json without disturbing
+the rows benchmarks/run.py owns:
+
+    PYTHONPATH=src python -m benchmarks.locality --json \
+        BENCH_pagerank.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import repro
+from repro.graphs.reorder import available_orderings
+from .common import Csv, Dataset, suite, timeit
+
+ITERS = 20
+
+
+def run(datasets: list[Dataset], *, part_size: int = 65536,
+        orderings=None) -> Csv:
+    names = list(orderings) if orderings else list(available_orderings())
+    if "none" not in names:
+        names = ["none"] + names    # the gain baseline is mandatory
+    csv = Csv()
+    for ds in datasets:
+        base_r = None
+        for name in names:
+            sess = repro.open(ds.graph, repro.EngineConfig(
+                method="pcpm", part_size=part_size, reorder=name,
+                num_iterations=ITERS, tol=0.0))
+            r = sess.plan.compression_ratio
+            if name == "none":
+                base_r = r
+
+            def once():
+                sess.pagerank().ranks.block_until_ready()
+
+            sec_iter = timeit(once, warmup=1, iters=3) / ITERS
+            gain = (f",r_gain={r / base_r:.2f}"
+                    if base_r else "")
+            csv.add(f"locality/{ds.name}/{name}/r", 0.0,
+                    f"r={r:.2f}{gain}")
+            csv.add(f"locality/{ds.name}/{name}/iter", sec_iter,
+                    f"ms_per_iter={sec_iter * 1e3:.2f}")
+    return csv
+
+
+def summarize(rows) -> dict:
+    """Fold locality/ rows into the JSON summary block: per dataset,
+    per ordering, r / warm per-iter us / r gain over 'none'."""
+    summ: dict = {}
+    for n, us, derived in rows:
+        if not n.startswith("locality/"):
+            continue
+        _, ds_name, ordering, kind = n.split("/")
+        e = summ.setdefault(ds_name, {}).setdefault(ordering, {})
+        if kind == "r":
+            e["r"] = float(derived.split("r=")[1].split(",")[0])
+        else:
+            e["iter_us"] = round(us, 1)
+    for ords in summ.values():
+        base = ords.get("none", {}).get("r")
+        if base:
+            for e in ords.values():
+                e["r_gain"] = round(e["r"] / base, 2)
+    return summ
+
+
+def _merge_json(path: str, rows, meta: dict) -> None:
+    """Replace the locality/ rows of an existing benchmark JSON,
+    leaving every other module's rows alone (run.py owns the file)."""
+    doc = {}
+    if os.path.exists(path) and os.path.getsize(path) > 0:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except json.JSONDecodeError:
+            doc = {}
+    kept = [r for r in doc.get("rows", [])
+            if not r["name"].startswith("locality/")]
+    doc["rows"] = kept + [{"name": n, "us_per_call": round(us, 1),
+                           "derived": derived}
+                          for n, us, derived in rows]
+    doc["locality"] = summarize(rows)
+    doc["locality_meta"] = meta
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=16)
+    ap.add_argument("--part-size", type=int, default=None)
+    ap.add_argument("--reorder", nargs="*", default=None,
+                    choices=list(available_orderings()),
+                    help="orderings to measure (default: all; 'none' "
+                         "is always included as the gain baseline)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="merge locality rows into an existing "
+                         "BENCH_pagerank.json (append, not overwrite)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    datasets = suite(args.scale)[:2]      # kron + social (rmat regime)
+    if args.part_size is None:
+        from .common import default_part_size
+        args.part_size = default_part_size(1 << args.scale)
+    print(f"# locality scale={args.scale} part_size={args.part_size}",
+          flush=True)
+    print("name,us_per_call,derived")
+    out = run(datasets, part_size=args.part_size,
+              orderings=args.reorder)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s, {len(out.rows)} rows", flush=True)
+    if args.json:
+        _merge_json(args.json, out.rows, meta={
+            "scale": args.scale, "part_size": args.part_size,
+            "iters": ITERS, "total_seconds": round(total_s, 1),
+        })
+        print(f"# merged into {args.json}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

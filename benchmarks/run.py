@@ -25,7 +25,14 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
                          "table7 dist e2e sharded serve serve_push "
-                         "stream")
+                         "stream locality")
+    ap.add_argument("--reorder", default=None,
+                    choices=["none", "degree", "bfs", "hybrid"],
+                    help="add the plan-layer locality job, measuring "
+                         "this ordering against 'none' (compression "
+                         "ratio r + warm per-iter time through "
+                         "EngineConfig(reorder=...)); --only locality "
+                         "without this flag measures every ordering")
     ap.add_argument("--shards", type=int, default=None, metavar="N",
                     help="enable the sharded fused-loop comparison "
                          "with N shards (clamped to visible devices; "
@@ -58,7 +65,7 @@ def main(argv=None) -> int:
                    table6_comm_locality, fig12_partition_sweep,
                    table7_preproc, dist_wire, pagerank_e2e,
                    sharded_loop, serve_load, serve_push,
-                   stream_updates)
+                   stream_updates, locality)
     jobs = {
         "table4": lambda: table4_runtime.run(
             datasets, part_size=args.part_size),
@@ -83,12 +90,20 @@ def main(argv=None) -> int:
             datasets[:2], part_size=args.part_size),
         "stream": lambda: stream_updates.run(
             datasets[:1], part_size=args.part_size),
+        # --reorder X measures just [none, X]; --only locality with no
+        # --reorder sweeps every registered ordering
+        "locality": lambda: locality.run(
+            datasets[:2], part_size=args.part_size,
+            orderings=(["none", args.reorder] if args.reorder
+                       else None)),
     }
     selected = args.only or [j for j in jobs
                              if j not in ("sharded", "serve",
-                                          "serve_push")]
+                                          "serve_push", "locality")]
     if args.shards and "sharded" not in selected:
         selected = selected + ["sharded"]
+    if args.reorder and "locality" not in selected:
+        selected = selected + ["locality"]
     if args.serve:
         selected = selected + [j for j in ("serve", "serve_push")
                                if j not in selected]
@@ -162,6 +177,11 @@ def main(argv=None) -> int:
                 return e
 
             doc["patch_vs_rebuild"] = [_entry(t) for t in stream_tags]
+        # plan-layer reordering summary (ISSUE 8): r + warm per-iter
+        # per ordering, with the gain over the unreordered plan
+        loc = locality.summarize(out.rows)
+        if loc:
+            doc["locality"] = loc
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {args.json}", flush=True)

@@ -14,6 +14,8 @@ registry all consumers dispatch through) — see DESIGN.md §8.
 from .api import EngineConfig, Session, open
 from .core.backends import (Backend, available_backends, get_backend,
                             register_backend)
+from .ingest import (LinkFilter, NodeIdMapping, VirtualLinks,
+                     ingest_edge_list)
 from .core.plan import (GraphPlan, PlanConfig, build_plan,
                         clear_plan_cache, evict_plans, install_plan,
                         plan_cache_stats)
@@ -27,4 +29,5 @@ __all__ = [
     "evict_plans", "install_plan", "plan_cache_stats",
     "ResilienceConfig", "check_plan_integrity",
     "DynamicGraph", "GraphDelta",
+    "LinkFilter", "NodeIdMapping", "VirtualLinks", "ingest_edge_list",
 ]

@@ -58,6 +58,11 @@ class EngineConfig:
     num_shards: Optional[int] = None      # sharding backends; None = all
     gather_block: int = DEFAULT_GATHER_BLOCK
     two_phase: bool = False               # rejected by Session (fused)
+    # locality-enhancing node relabeling (paper §VI-D1): "none",
+    # "degree", "bfs" or "hybrid" — the plan's layouts are built on the
+    # relabeled graph; every Session/serve result is mapped back to the
+    # original ids transparently
+    reorder: str = "none"
     # run layer: iteration
     damping: float = 0.85
     num_iterations: int = 20
@@ -71,7 +76,8 @@ class EngineConfig:
     def plan_config(self) -> PlanConfig:
         return PlanConfig(method=self.method, part_size=self.part_size,
                           num_shards=self.num_shards,
-                          gather_block=self.gather_block)
+                          gather_block=self.gather_block,
+                          reorder=self.reorder)
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -88,7 +94,7 @@ class Session:
     """
 
     def __init__(self, g: Graph, config: EngineConfig | None = None,
-                 **overrides):
+                 *, idmap=None, **overrides):
         cfg = config or EngineConfig()
         if overrides:
             cfg = cfg.replace(**overrides)
@@ -100,6 +106,10 @@ class Session:
                 "two-phase SpMVEngine directly for phase timing.")
         self.graph = g
         self.config = cfg
+        # external-id mapping for ingested real graphs (ingest/
+        # idmap.py) — threaded through to serve results and
+        # ``top_ranked``; None for synthetic dense-id graphs
+        self.idmap = idmap
         # build_plan validates the graph at entry (crisp ValueError on
         # out-of-range ids / bad dtypes, DESIGN.md §10)
         self.plan: GraphPlan = build_plan(g, cfg.plan_config())
@@ -164,8 +174,13 @@ class Session:
         kw.update(overrides)
         key = (kw["damping"], kw["dangling"])
         tol, budget = kw["tol"], kw["num_iterations"]
+        # reordered plans take the cold path: the residual-push updater
+        # runs against the plan's internal-space streams while the
+        # stored warm state is original-space — an honest fallback, not
+        # a silent mix of id spaces
         if warm and self._solved_ranks is not None \
                 and self._solved_key == key \
+                and self.plan.reorder_perm is None \
                 and 0.0 < tol and self._solved_res <= tol:
             from .stream.delta import GraphDelta
             from .stream.incremental import update_ranks
@@ -183,6 +198,22 @@ class Session:
         self._solved_res = float(achieved)
         self._delta_acc = None
         return res
+
+    def top_ranked(self, k: int = 10):
+        """``(ids, scores)`` of the ``k`` highest-ranked nodes from the
+        last ``pagerank()`` solve; ids are the graph's EXTERNAL labels
+        when the session carries a ``NodeIdMapping`` (ingested real
+        graphs), original dense ids otherwise."""
+        if self._solved_ranks is None:
+            raise ValueError("no solve yet: run pagerank() first")
+        ranks = np.asarray(self._solved_ranks)
+        k = min(int(k), ranks.shape[0])
+        part = np.argpartition(-ranks, k - 1)[:k]
+        ids = part[np.lexsort((part, -ranks[part]))]   # score desc, id asc
+        scores = ranks[ids]
+        if self.idmap is not None:
+            return self.idmap.to_external(ids), scores
+        return ids.astype(np.int64), scores
 
     # ----------------------------------------------------- checkpoints
     def save_checkpoint(self, path: str) -> None:
@@ -258,7 +289,7 @@ class Session:
         from .serve.scheduler import SlotScheduler
         cfg = self.config
         kw = dict(slots=cfg.slots, damping=cfg.damping, chunk=cfg.chunk,
-                  dangling=cfg.dangling, route=route)
+                  dangling=cfg.dangling, route=route, idmap=self.idmap)
         kw.update(overrides)
         return SlotScheduler(self.graph, engine=self.engine, **kw)
 
@@ -275,9 +306,11 @@ class Session:
                               batch=batch, **kw)
 
 
-def open(g: Graph, config: EngineConfig | None = None,
-         **overrides) -> Session:
+def open(g: Graph, config: EngineConfig | None = None, *,
+         idmap=None, **overrides) -> Session:
     """Open a :class:`Session` on ``g`` — the public front door.
     ``overrides`` are ``EngineConfig`` fields applied on top of
-    ``config`` (or the defaults): ``repro.open(g, method="pdpr")``."""
-    return Session(g, config, **overrides)
+    ``config`` (or the defaults): ``repro.open(g, method="pdpr")``.
+    ``idmap`` attaches a ``NodeIdMapping`` (ingest/idmap.py) so serve
+    and ``top_ranked`` results carry the graph's external ids."""
+    return Session(g, config, idmap=idmap, **overrides)

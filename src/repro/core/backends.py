@@ -149,6 +149,12 @@ def normalize_config(g: Graph, cfg: PlanConfig) -> PlanConfig:
     differing only in irrelevant knobs share one plan."""
     from .plan import DEFAULT_GATHER_BLOCK
     backend = get_backend(cfg.method)
+    if cfg.reorder != "none":
+        from ..graphs.reorder import available_orderings
+        if cfg.reorder not in available_orderings():
+            raise ValueError(
+                f"unknown reorder {cfg.reorder!r}; valid: "
+                f"{available_orderings()}")
     kw = {}
     if backend.supports_sharding:
         shards = cfg.num_shards or jax.device_count()
@@ -196,6 +202,20 @@ def two_phase_spmv_fn(plan: GraphPlan):
 
         plan._device["two_phase_spmv"] = fn
     return fn
+
+
+def reorder_device(plan: GraphPlan):
+    """Device-resident ``(perm, inv)`` int32 arrays for a reordered
+    plan (``perm[old] = new``, ``inv[new] = old``), cached on the plan
+    — the one-shot boundary maps (``x_int = x[inv]``,
+    ``y_orig = y_int[perm]``) gather through these."""
+    dev = plan._device.get("reorder_dev")
+    if dev is None:
+        from .plan import reorder_inverse
+        dev = (jnp.asarray(plan.reorder_perm),
+               jnp.asarray(reorder_inverse(plan)))
+        plan._device["reorder_dev"] = dev
+    return dev
 
 
 def fused_loop_cache(plan: GraphPlan) -> dict:

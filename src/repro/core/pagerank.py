@@ -268,13 +268,27 @@ def pagerank(g: Graph, *, method: str = "pcpm", num_iterations: int = 20,
     New code should prefer ``repro.open(g, cfg).pagerank()``."""
     eng = engine or SpMVEngine(g, method=method, part_size=part_size)
     if driver == "python" or eng.two_phase:
+        # the engine's __call__ already maps reordered plans back to
+        # the original labeling per pass — nothing to do here
         return _run_python(g, eng, num_iterations=num_iterations,
                            damping=damping, tol=tol, dangling=dangling)
     if driver != "fused":
         raise ValueError(f"unknown driver {driver!r}")
-    return _run_fused(g, eng, num_iterations=num_iterations,
-                      damping=damping, tol=tol, check_every=check_every,
-                      dangling=dangling)
+    if eng.plan.reorder_perm is None:
+        return _run_fused(g, eng, num_iterations=num_iterations,
+                          damping=damping, tol=tol,
+                          check_every=check_every, dangling=dangling)
+    # reordered plan: iterate wholly in internal (relabeled) space —
+    # the uniform start/teleport vectors are permutation-invariant, so
+    # only the FINAL ranks pay one gather back to the original ids
+    from .backends import reorder_device
+    from .plan import internal_graph
+    res = _run_fused(internal_graph(g, eng.plan), eng,
+                     num_iterations=num_iterations, damping=damping,
+                     tol=tol, check_every=check_every, dangling=dangling)
+    perm, _ = reorder_device(eng.plan)
+    res.ranks = jnp.take(res.ranks, perm, axis=0)
+    return res
 
 
 def pagerank_reference(g: Graph, *, num_iterations: int = 20,

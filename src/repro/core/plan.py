@@ -52,6 +52,12 @@ class PlanConfig:
     num_shards: Optional[int] = None   # sharded backends; None = all devices
     shard_axis: str = "shards"
     gather_block: int = DEFAULT_GATHER_BLOCK
+    # locality-enhancing node relabeling (paper §VI-D1, graphs/
+    # reorder.py): the plan's layouts are built on the RELABELED graph
+    # while the plan itself stays keyed to the original graph's
+    # fingerprint — the reorder name is part of this cache-key half,
+    # so each ordering gets its own plan/chain entry
+    reorder: str = "none"
 
     def replace(self, **kw) -> "PlanConfig":
         return dataclasses.replace(self, **kw)
@@ -95,6 +101,11 @@ class GraphPlan:
     # patch.py): patched plans form a parent chain g0 -> g1 -> ... that
     # ``evict_plans`` can release as one unit
     parent_fp: Optional[str] = None
+    # locality relabeling (config.reorder != "none"): the layouts above
+    # were built on ``g.relabel(reorder_perm)``; every consumer maps
+    # inputs in via the inverse and results back via the permutation
+    # (``internal_graph`` / ``reorder_inverse`` below)
+    reorder_perm: Optional[np.ndarray] = None    # (n,) int32, old -> new
     _device: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------- views
@@ -128,8 +139,10 @@ class GraphPlan:
         ``load`` — meshes and compiled closures are runtime-specific.
         """
         arrays: dict[str, np.ndarray] = {}
+        if self.reorder_perm is not None:
+            arrays["reorder_perm"] = self.reorder_perm
         meta: dict[str, Any] = {
-            "version": 2,
+            "version": 3,
             "config": dataclasses.asdict(self.config),
             "num_nodes": self.num_nodes,
             "num_edges": self.num_edges,
@@ -187,14 +200,18 @@ class GraphPlan:
                 f"{path!r} is not a GraphPlan file (no __meta__ entry "
                 "— a raw graph npz goes through graphs.io.load)")
         meta = json.loads(str(z["__meta__"]))
-        if meta.get("version") not in (1, 2):
+        if meta.get("version") not in (1, 2, 3):
             raise ValueError(
                 f"unsupported plan format version {meta.get('version')!r}"
-                f" in {path!r} (this build reads versions 1-2)")
+                f" in {path!r} (this build reads versions 1-3)")
+        # pre-v3 configs lack the reorder key; the dataclass default
+        # ("none") is exactly what those plans were built with
         cfg = PlanConfig(**meta["config"])
         n, m = int(meta["num_nodes"]), int(meta["num_edges"])
         part = Partitioning(n, cfg.part_size)
         kw: dict[str, Any] = {}
+        if "reorder_perm" in z:
+            kw["reorder_perm"] = z["reorder_perm"]
         for key in ("csc_src", "csc_dst", "bv_src", "bv_dst"):
             if key in z:
                 kw[key] = z[key]
@@ -245,6 +262,11 @@ class GraphPlan:
             else:
                 kw["schedule"] = bvgas_schedule(
                     kw["bv_dst"], num_nodes=n, block=cfg.gather_block)
+        if cfg.reorder != "none" and "reorder_perm" not in kw:
+            raise ValueError(
+                f"{path!r} declares reorder={cfg.reorder!r} but stores "
+                "no permutation — refusing to serve internal-space "
+                "layouts without the mapping back")
         return GraphPlan(cfg, n, m, part, graph_fp=graph_fp,
                          parent_fp=meta.get("parent_fp"), **kw)
 
@@ -417,7 +439,17 @@ def build_plan(g: Graph, config: PlanConfig | None = None) -> GraphPlan:
         _touch(_PLAN_CACHE, key)
         return plan
     _STATS.plan_builds += 1
-    plan = get_backend(cfg.method).build_plan(g, cfg)
+    if cfg.reorder != "none":
+        # build every layout on the RELABELED graph (that's the whole
+        # point — contiguous hub labels raise PNG compression), but
+        # stamp the ORIGINAL graph's fingerprint: the plan belongs to
+        # g, and the reorder name in cfg keeps the cache entry distinct
+        from ..graphs.reorder import reorder_permutation
+        perm = reorder_permutation(g, cfg.reorder)
+        plan = get_backend(cfg.method).build_plan(g.relabel(perm), cfg)
+        plan = dataclasses.replace(plan, reorder_perm=perm, graph_fp=fp)
+    else:
+        plan = get_backend(cfg.method).build_plan(g, cfg)
     if plan.graph_fp is None:
         plan = dataclasses.replace(plan, graph_fp=fp)
     _bounded_insert(_PLAN_CACHE, MAX_CACHED_PLANS, key, plan)
@@ -440,10 +472,40 @@ def install_plan(g: Graph, plan: GraphPlan) -> GraphPlan:
     if plan.graph_fp is None:
         plan = dataclasses.replace(plan, graph_fp=fp)
     _bounded_insert(_PLAN_CACHE, MAX_CACHED_PLANS, (fp, cfg), plan)
-    if plan.png is not None and (fp, cfg.part_size) not in _PNG_CACHE:
+    # a reordered plan's PNG is of the RELABELED graph — seeding the
+    # shared PNG cache under the original fingerprint would poison a
+    # later reorder="none" build of the same (graph, part_size)
+    if (plan.png is not None and plan.reorder_perm is None
+            and (fp, cfg.part_size) not in _PNG_CACHE):
         _bounded_insert(_PNG_CACHE, MAX_CACHED_PNGS,
                         (fp, cfg.part_size), plan.png)
     return plan
+
+
+def internal_graph(g: Graph, plan: GraphPlan) -> Graph:
+    """The graph the plan's layouts actually index: ``g`` itself for
+    plain plans, ``g.relabel(perm)`` (cached on the plan) for reordered
+    ones.  Fused drivers, steppers and push engines run wholly in this
+    internal space — results map back once at the boundary, so the
+    locality win is never taxed by per-iteration permutes."""
+    if plan.reorder_perm is None:
+        return g
+    gi = plan._device.get("internal_graph")
+    if gi is None:
+        gi = g.relabel(plan.reorder_perm)
+        plan._device["internal_graph"] = gi
+    return gi
+
+
+def reorder_inverse(plan: GraphPlan) -> np.ndarray:
+    """``inv[internal_id] = original_id`` for a reordered plan (cached
+    on the plan's runtime dict)."""
+    inv = plan._device.get("reorder_inv")
+    if inv is None:
+        from ..graphs.reorder import inverse_permutation
+        inv = inverse_permutation(plan.reorder_perm)
+        plan._device["reorder_inv"] = inv
+    return inv
 
 
 def _chain_fingerprints(fp: str) -> set[str]:

@@ -284,7 +284,13 @@ class SpMVEngine:
         device-resident streams — what the fused `lax.while_loop`
         PageRank driver and AOT compilation consume.  Raises for
         ``two_phase`` engines rather than silently dropping the phase
-        barrier (a host-side barrier has no meaning under jit)."""
+        barrier (a host-side barrier has no meaning under jit).
+
+        For reordered plans (``plan.reorder_perm`` set) this closure
+        operates in INTERNAL (relabeled) space — fused consumers
+        iterate there and map results once at the boundary
+        (``core.plan.internal_graph`` / ``backends.reorder_device``);
+        ``__call__`` is the original-space per-pass wrapper."""
         if self.two_phase:
             raise ValueError(
                 "a two_phase engine cannot provide a fused spmv_fn: "
@@ -296,9 +302,17 @@ class SpMVEngine:
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         from . import backends
-        if not self.two_phase:
-            return backends.spmv_fn(self.plan)(x)
-        # host barrier between scatter and gather: the backend's own
-        # two_phase_fn (bins round-trip through HBM exactly as the
-        # paper's bins round-trip through DRAM — timing fidelity)
-        return backends.two_phase_spmv_fn(self.plan)(x)
+        fn = (backends.two_phase_spmv_fn(self.plan) if self.two_phase
+              # host barrier between scatter and gather: the backend's
+              # own two_phase_fn (bins round-trip through HBM exactly
+              # as the paper's bins round-trip through DRAM)
+              else backends.spmv_fn(self.plan))
+        if self.plan.reorder_perm is None:
+            return fn(x)
+        # reordered plan: the layouts index the relabeled graph, so map
+        # x into internal space and the result back — callers see the
+        # original labeling.  Fused consumers skip this by iterating in
+        # internal space via spmv_fn() and mapping once at the end.
+        perm, inv = backends.reorder_device(self.plan)
+        y = fn(jnp.take(jnp.asarray(x), inv, axis=0))
+        return jnp.take(y, perm, axis=0)

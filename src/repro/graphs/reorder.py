@@ -81,6 +81,45 @@ def hybrid_order(g: Graph) -> np.ndarray:
     return perm
 
 
+# ---------------------------------------------------------------------------
+# Registry — what PlanConfig(reorder=...) resolves through (core/plan.py)
+# ---------------------------------------------------------------------------
+ORDERINGS = {
+    "degree": degree_order,
+    "bfs": bfs_order,
+    "hybrid": hybrid_order,
+}
+
+
+def available_orderings() -> tuple[str, ...]:
+    """Every valid ``PlanConfig.reorder`` value (``"none"`` included)."""
+    return ("none",) + tuple(sorted(ORDERINGS))
+
+
+def reorder_permutation(g: Graph, name: str) -> np.ndarray:
+    """The ``perm[old_id] = new_id`` permutation for ordering ``name``
+    (memoized on the graph instance — a pcpm and a pcpm_pallas plan of
+    the same reordered graph compute the BFS once)."""
+    if name not in ORDERINGS:
+        raise ValueError(f"unknown ordering {name!r}; valid: "
+                         f"{available_orderings()}")
+    key = f"_reorder_perm_{name}"
+    perm = g.__dict__.get(key)
+    if perm is None:
+        perm = ORDERINGS[name](g).astype(np.int32)
+        g.__dict__[key] = perm       # frozen-safe: dict write
+    return perm
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    """``inv[new_id] = old_id`` — maps internal-space vectors/ids back
+    to the original labeling (``x_orig = x_int[perm]``,
+    ``id_orig = inv[id_int]``)."""
+    inv = np.empty(len(perm), dtype=np.int32)
+    inv[perm] = np.arange(len(perm), dtype=np.int32)
+    return inv
+
+
 def _undirected_csr(g: Graph) -> tuple[np.ndarray, np.ndarray]:
     src = np.concatenate([g.src, g.dst])
     dst = np.concatenate([g.dst, g.src])

@@ -99,6 +99,10 @@ def snapshot_scheduler(sch, path: str) -> None:
             "graph_fp": graph_fingerprint(sch.g),
             "damping": sch.damping, "dangling": sch.dangling,
             "n_pad": sch._n_pad,
+            # slot columns and seeds are INTERNAL-space vectors when
+            # the plan is reordered — the restoring scheduler must use
+            # the same ordering or it would misread every column
+            "reorder": sch.engine.plan.config.reorder,
             "uid_floor": (max(q.uid for q, _, _ in specs) + 1
                           if specs else 0)}
     np.savez_compressed(
@@ -163,6 +167,12 @@ def restore_scheduler(path: str, g, **scheduler_kwargs):
             f"{meta['damping']}, dangling={meta['dangling']!r}; the "
             f"restored scheduler has damping={sch.damping}, "
             f"dangling={sch.dangling!r}")
+    if sch.engine.plan.config.reorder != meta.get("reorder", "none"):
+        raise ValueError(
+            "snapshot/scheduler mismatch: snapshot slot state is in "
+            f"reorder={meta.get('reorder', 'none')!r} internal space; "
+            f"the restored scheduler uses "
+            f"reorder={sch.engine.plan.config.reorder!r}")
     if sch._n_pad != meta["n_pad"]:
         raise ValueError(
             f"snapshot/scheduler mismatch: snapshot state is padded "

@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import LMConfig
-from ..core.backends import resolve_engine
+from ..core.backends import resolve_engine, reorder_device
 from ..core.pagerank import _inv_degree, fused_power_iteration
+from ..core.plan import internal_graph, reorder_inverse
 from ..core.spmv import SpMVEngine
 from ..graphs.formats import Graph
 from ..models import transformer as tf
@@ -118,6 +119,13 @@ class PageRankServer:
         self.trace_count = 0
         self._uniform_cache = None
         multi = batch > 1
+        # reordered plans (DESIGN.md §12): iterate in the plan's
+        # internal (relabeled) space — seeds map in at query, ranks
+        # map back out, inverse degrees come from the internal graph
+        self._perm = self.engine.plan.reorder_perm
+        self._inv = (None if self._perm is None
+                     else reorder_inverse(self.engine.plan))
+        gi = internal_graph(g, self.engine.plan)
 
         if self.sharded:
             from ..core.distributed import sharded_power_iteration
@@ -131,7 +139,7 @@ class PageRankServer:
                 self.engine)
             self._state_sharding = (mat_sharding if multi
                                     else self._vec_sharding)
-            self._inv_deg = _sharded_inv_degree(g, self.engine,
+            self._inv_deg = _sharded_inv_degree(gi, self.engine,
                                                 self._vec_sharding)
             shape = ((self._n_pad, batch) if multi else (self._n_pad,))
             spec = jax.ShapeDtypeStruct(shape, jnp.float32,
@@ -144,7 +152,7 @@ class PageRankServer:
                 num_iterations=num_iterations, tol=tol,
                 check_every=check_every, multi=multi, dangling=dangling)
             self._n_pad = self.n
-            self._inv_deg = _inv_degree(g)
+            self._inv_deg = _inv_degree(gi)
             shape = (self.n, batch) if multi else (self.n,)
             spec = jax.ShapeDtypeStruct(shape, jnp.float32)
             inv_spec = jax.ShapeDtypeStruct((self.n,), jnp.float32)
@@ -192,6 +200,8 @@ class PageRankServer:
         else:
             host = _normalize_teleport(
                 np.asarray(seeds, dtype=np.float32).reshape(shape))
+            if self._perm is not None:
+                host = host[self._inv]        # into internal space
             if self.sharded:
                 pad = self._n_pad - self.n
                 host = np.pad(host,
@@ -201,6 +211,9 @@ class PageRankServer:
         pr, it, res = self._compiled(v, self._inv_deg, base)
         if self.sharded:
             pr = pr[:self.n]
+        if self._perm is not None:            # back to original ids
+            perm_dev, _ = reorder_device(self.engine.plan)
+            pr = jnp.take(pr, perm_dev, axis=0)
         it = int(it)
         res_host = np.asarray(res)[:it]
         return pr, it, [float(r) for r in res_host if r >= 0.0]

@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.backends import resolve_engine
-from ..core.plan import install_plan
+from ..core.plan import install_plan, internal_graph, reorder_inverse
 from ..core.pagerank import _inv_degree, masked_chunk_stepper
 from ..core.spmv import SpMVEngine
 from ..graphs.formats import Graph, validate_graph
@@ -123,6 +123,11 @@ class QueryResult:
     ranks: Optional[np.ndarray] = None        # (n,) unless top_k set
     top_ids: Optional[np.ndarray] = None      # (k,) int32
     top_scores: Optional[np.ndarray] = None   # (k,) float32
+    # external labels for top_ids when the scheduler carries a
+    # NodeIdMapping (ingest/idmap.py) — what a real-graph deployment
+    # returns to callers (ranks/top_ids are always ORIGINAL graph ids,
+    # already mapped back from any reordered plan's internal space)
+    top_external: Optional[np.ndarray] = None
     error: Optional[str] = None               # explicit terminal failure
     degraded: bool = False                    # approximate-answer mode
 
@@ -145,7 +150,7 @@ class SlotScheduler:
                  resilience: ResilienceConfig | None = None,
                  fault_injector=None, route: str = "auto",
                  push_tol: float = 1e-4, push_mode: str = "auto",
-                 push_max_sweeps: int = 64):
+                 push_max_sweeps: int = 64, idmap=None):
         if slots < 1:
             raise ValueError(f"need at least one slot; got {slots}")
         if route not in ("auto", "push", "stepper"):
@@ -163,6 +168,17 @@ class SlotScheduler:
                                      num_shards=num_shards,
                                      engine=engine)
         self.sharded = self.engine.backend.supports_sharding
+        # locality-reordered plans (core/plan.py): the slot pool, the
+        # stepper and the push engine all run in the plan's INTERNAL
+        # (relabeled) id space — seeds map in at submit, ranks/top ids
+        # map back at finish, so per-iteration work never pays a
+        # permute.  idmap (ingest/idmap.py) additionally labels top-k
+        # results with the graph's external ids.
+        self._perm = self.engine.plan.reorder_perm       # old -> new
+        self._inv = (reorder_inverse(self.engine.plan)
+                     if self._perm is not None else None)
+        self._g_int = internal_graph(g, self.engine.plan)
+        self.idmap = idmap
         self.metrics = metrics or ServeMetrics()
         self.clock = self.metrics.clock
         self.resilience = resilience or ResilienceConfig()
@@ -305,18 +321,20 @@ class SlotScheduler:
         at construction and once per ``apply_delta``; the admit/
         extract/restore/top-k executables are shape-only and are NOT
         rebuilt."""
+        gi = internal_graph(g, engine.plan)   # stepper space (reorder)
         if self.sharded:
             from ..core.distributed import sharded_chunk_stepper
             step = sharded_chunk_stepper(
                 engine.sharded_layout, engine.mesh,
                 engine.shard_axis, damping=self.damping,
                 chunk=self.chunk, dangling=self.dangling)
-            inv_deg = _sharded_inv_degree(g, engine, self._vec_sharding)
+            inv_deg = _sharded_inv_degree(gi, engine,
+                                          self._vec_sharding)
         else:
             step = masked_chunk_stepper(engine, damping=self.damping,
                                         chunk=self.chunk,
                                         dangling=self.dangling)
-            inv_deg = _inv_degree(g)
+            inv_deg = _inv_degree(gi)
 
         def counted_step(pr, base, active, tol_col, budget, inv_deg):
             self.trace_count += 1     # increments only at trace time
@@ -349,6 +367,14 @@ class SlotScheduler:
         serving — the failure is counted and re-raised."""
         from ..stream.delta import apply_delta as apply_edges
         from ..stream.patch import patch_plan
+        if self._perm is not None:
+            raise ValueError(
+                "apply_delta on a reorder-enabled scheduler is not "
+                "supported: the locality permutation is a function of "
+                "the graph, so the delta would change the slot pool's "
+                "internal id space under the in-flight columns — "
+                "drain and construct a fresh scheduler for the updated "
+                "graph instead")
         self._delta_idx += 1
         try:
             if self._injector is not None:
@@ -420,6 +446,8 @@ class SlotScheduler:
         if seeds is not None:
             seed = _normalize_teleport(
                 np.asarray(seeds, dtype=np.float32).reshape(self.n))
+            if self._perm is not None:
+                seed = seed[self._inv]        # into internal space
             if self._n_pad != self.n:
                 seed = np.pad(seed, (0, self._n_pad - self.n))
         if route == "push":
@@ -489,10 +517,27 @@ class SlotScheduler:
     def _push_engine(self):
         if self._push is None:
             from .push import PushQueryEngine
+            # built on the INTERNAL graph so push estimates are
+            # column-compatible with the stepper's slot space (the
+            # warm-start fallback writes them straight into a column)
             self._push = PushQueryEngine(
-                self.g, self.engine, damping=self.damping,
+                self._g_int, self.engine, damping=self.damping,
                 dangling=self.dangling, mode=self.push_mode)
         return self._push
+
+    # ---------------------------------------------- id-space boundary
+    def _vec_to_original(self, vec: np.ndarray) -> np.ndarray:
+        """Internal-space (n,) vector -> original node labeling."""
+        return vec[self._perm] if self._perm is not None else vec
+
+    def _ids_to_original(self, ids: np.ndarray) -> np.ndarray:
+        """Internal-space node ids -> original node ids."""
+        return self._inv[ids] if self._perm is not None else ids
+
+    def _externalize(self, ids_orig) -> Optional[np.ndarray]:
+        """Original ids -> external labels, when an idmap is attached."""
+        return (self.idmap.to_external(ids_orig)
+                if self.idmap is not None else None)
 
     def _serve_push(self, q: Query) -> bool:
         """Answer ``q`` inline through the push backend.  Returns True
@@ -521,16 +566,19 @@ class SlotScheduler:
         self.metrics.completed(q.uid, iterations=res.sweeps,
                                converged=True, degraded=q.degraded)
         if q.top_k is not None:
+            ids = self._ids_to_original(np.asarray(res.top_ids))
             result = QueryResult(
                 q.uid, res.sweeps, True, res.residual,
                 self.metrics.traces[q.uid].latency_s,
-                top_ids=res.top_ids, top_scores=res.top_scores,
+                top_ids=ids, top_scores=res.top_scores,
+                top_external=self._externalize(ids),
                 degraded=q.degraded)
         else:
             result = QueryResult(
                 q.uid, res.sweeps, True, res.residual,
                 self.metrics.traces[q.uid].latency_s,
-                ranks=res.estimate, degraded=q.degraded)
+                ranks=self._vec_to_original(res.estimate),
+                degraded=q.degraded)
         self.completed.append(result)
         return True
 
@@ -816,16 +864,19 @@ class SlotScheduler:
                                  k=q.top_k).compile())
                 self._topk_cache[q.top_k] = topk_c
             ids, scores = topk_c(self._pr, col)
+            ids = self._ids_to_original(np.asarray(ids))
             result = QueryResult(
                 q.uid, it, converged, residual,
                 self.metrics.traces[q.uid].latency_s,
-                top_ids=np.asarray(ids), top_scores=np.asarray(scores),
+                top_ids=ids, top_scores=np.asarray(scores),
+                top_external=self._externalize(ids),
                 degraded=q.degraded)
         else:
             ranks = np.asarray(self._extract_c(self._pr, col))[:self.n]
             result = QueryResult(
                 q.uid, it, converged, residual,
-                self.metrics.traces[q.uid].latency_s, ranks=ranks,
+                self.metrics.traces[q.uid].latency_s,
+                ranks=self._vec_to_original(ranks),
                 degraded=q.degraded)
         self.completed.append(result)
         self._slot_query[slot] = None

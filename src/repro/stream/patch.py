@@ -338,7 +338,13 @@ def patch_plan(plan: GraphPlan, delta: GraphDelta, g_new: Graph, *,
         return cached
     k = plan.partitioning.num_partitions
     dirty_frac = len(delta.dirty_partitions(plan.part_size)) / max(k, 1)
-    if backend.patch_plan is None or dirty_frac > dirty_threshold:
+    # reordered plans always rebuild: the ordering itself is a function
+    # of the graph, and the delta's dirty partitions are original-space
+    # ids while the plan's layouts live in relabeled space — a splice
+    # would patch the wrong partitions.  build_plan recomputes the
+    # permutation for g_new; the parent_fp chain is preserved.
+    if (backend.patch_plan is None or cfg.reorder != "none"
+            or dirty_frac > dirty_threshold):
         from ..core.plan import build_plan
         new_plan = dataclasses.replace(build_plan(g_new, cfg),
                                        parent_fp=plan.graph_fp)

@@ -1,0 +1,61 @@
+"""Round-trip tests for graphs/io.py (ISSUE 8 satellite).
+
+save/load must preserve dtypes exactly (int32 edges — a silently
+widened dtype would fail Graph's front-door validation downstream),
+handle the empty-edge graph, and pair with install_plan so a graph +
+plan persisted together warm-load with ZERO fresh plan builds.
+"""
+import numpy as np
+
+import repro
+from repro.core.plan import (graph_fingerprint, install_plan,
+                             plan_cache_stats)
+from repro.graphs import generators, io
+from repro.graphs.formats import Graph
+
+
+def test_round_trip_preserves_everything(tmp_path):
+    g = generators.rmat(6, 5, seed=4)
+    p = str(tmp_path / "g.npz")
+    io.save(p, g)
+    g2 = io.load(p)
+    assert g2.num_nodes == g.num_nodes
+    assert g2.src.dtype == np.int32 and g2.dst.dtype == np.int32
+    np.testing.assert_array_equal(g2.src, g.src)
+    np.testing.assert_array_equal(g2.dst, g.dst)
+    # identical edge sets fingerprint identically (cache-key contract)
+    assert graph_fingerprint(g2) == graph_fingerprint(g)
+
+
+def test_empty_edge_graph_round_trip(tmp_path):
+    empty = np.array([], dtype=np.int32)
+    g = Graph(7, empty, empty.copy())
+    p = str(tmp_path / "empty.npz")
+    io.save(p, g)
+    g2 = io.load(p)
+    assert g2.num_nodes == 7
+    assert g2.src.size == 0 and g2.src.dtype == np.int32
+
+
+def test_graph_plus_plan_warm_load(tmp_path):
+    """The server-restart path: persist graph AND plan, reload both in
+    a 'new process', install, open a session — plan_builds stays 0."""
+    g = generators.rmat(6, 5, seed=8)
+    cfg = repro.EngineConfig(part_size=32, reorder="degree")
+    sess = repro.open(g, cfg)
+    gp, pp = str(tmp_path / "g.npz"), str(tmp_path / "g.plan.npz")
+    io.save(gp, g)
+    sess.plan.save(pp)
+
+    g2 = io.load(gp)
+    plan2 = io.load_plan(pp)
+    np.testing.assert_array_equal(plan2.reorder_perm,
+                                  sess.plan.reorder_perm)
+    install_plan(g2, plan2)
+    before = plan_cache_stats().plan_builds
+    sess2 = repro.open(g2, cfg)
+    assert plan_cache_stats().plan_builds == before
+    np.testing.assert_allclose(
+        np.asarray(sess2.pagerank(num_iterations=30, tol=0.0).ranks),
+        np.asarray(sess.pagerank(num_iterations=30, tol=0.0).ranks),
+        atol=1e-7)

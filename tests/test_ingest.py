@@ -1,0 +1,359 @@
+"""Ingest subsystem acceptance (ISSUE 8).
+
+- streaming SNAP/TSV parsing: chunked, gzip-sniffed, comment-aware,
+  crisp errors with line numbers;
+- NodeIdMapping: external (64-bit / string) <-> dense int32 internal,
+  persisted next to the plan npz;
+- pipeline: link filters, self-loop/dup policy, virtual-link mass;
+- END TO END: fixture file -> parse -> id map -> filter -> reorder ->
+  Session.pagerank() + serve top-k, every result in ORIGINAL external
+  ids, matching the dense float64 oracle;
+- reorder-in-plan wiring: distinct cache entries per ordering, plan
+  save/load round-trips the permutation, warm-load via install_plan,
+  scheduler parity across orderings, honest apply_delta guards.
+"""
+import gzip
+import io
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import pagerank_reference
+from repro.core.plan import (build_plan, install_plan, plan_cache_stats)
+from repro.graphs import generators
+from repro.graphs.io import load_plan
+from repro.ingest import (LinkFilter, NodeIdMapping, ParseError,
+                          ingest_edge_list, iter_edge_chunks,
+                          read_edge_list)
+
+FIXTURE = Path(__file__).resolve().parent / "fixtures" / "web_sample.txt"
+OFFSITE = LinkFilter("offsite", lambda s, d: d < 900_000_000)
+
+
+def oracle_top(ref, k):
+    """Top-k internal ids of a rank vector, score desc then id asc —
+    the same tie-break ``Session.top_ranked`` uses."""
+    part = np.argpartition(-ref, k - 1)[:k]
+    return part[np.lexsort((part, -ref[part]))]
+
+
+# -------------------------------------------------------------- parser
+class TestParse:
+    def test_fixture_streams_in_chunks(self):
+        s, d = read_edge_list(FIXTURE)
+        assert s.dtype == np.int64 and s.size == 295
+        assert d.max() >= 900_000_000          # offsite edges present
+        cs, cd = [], []
+        sizes = []
+        for a, b in iter_edge_chunks(FIXTURE, chunk_edges=37):
+            sizes.append(a.size)
+            cs.append(a)
+            cd.append(b)
+        assert max(sizes) == 37 and len(sizes) > 1
+        np.testing.assert_array_equal(np.concatenate(cs), s)
+        np.testing.assert_array_equal(np.concatenate(cd), d)
+
+    def test_gzip_sniffed_from_magic_bytes(self):
+        raw = FIXTURE.read_bytes()
+        s, d = read_edge_list(FIXTURE)
+        # no .gz extension anywhere — detection is content-based
+        gs, gd = read_edge_list(io.BytesIO(gzip.compress(raw)))
+        np.testing.assert_array_equal(gs, s)
+        np.testing.assert_array_equal(gd, d)
+
+    def test_comments_blanks_and_extra_columns(self):
+        text = "# c\n% c\n\n1 2 0.5 2020\n2 3\n"
+        s, d = read_edge_list(io.StringIO(text))
+        assert s.tolist() == [1, 2] and d.tolist() == [2, 3]
+
+    def test_explicit_delimiter(self):
+        s, d = read_edge_list(io.StringIO("1,2\n3,,4\n"), delimiter=",")
+        assert s.tolist() == [1, 3] and d.tolist() == [2, 4]
+
+    def test_string_ids(self):
+        s, d = read_edge_list(io.StringIO("a b\nb c\n"))
+        assert s.dtype.kind == "U" and s.tolist() == ["a", "b"]
+
+    def test_short_line_names_line_number(self):
+        with pytest.raises(ParseError, match="line 3"):
+            read_edge_list(io.StringIO("# c\n1 2\noops\n"))
+
+    def test_mixed_dtype_names_culprit(self):
+        with pytest.raises(ParseError, match="non-numeric id 'x'"):
+            read_edge_list(io.StringIO("1 2\nx 4\n"))
+
+    def test_chunk_edges_validated(self):
+        with pytest.raises(ValueError, match="chunk_edges"):
+            list(iter_edge_chunks(io.StringIO("1 2\n"), chunk_edges=0))
+
+
+# --------------------------------------------------------------- idmap
+class TestIdMap:
+    def test_first_seen_dense_assignment(self):
+        m = NodeIdMapping()
+        out = m.map_chunk(np.array([50, 7, 50, 99]))
+        assert out.tolist() == [0, 1, 0, 2] and out.dtype == np.int32
+        assert m.num_nodes == 3
+        assert m.external_ids.tolist() == [50, 7, 99]
+        np.testing.assert_array_equal(m.to_external([2, 0]), [99, 50])
+
+    def test_to_internal_missing_modes(self):
+        m = NodeIdMapping()
+        m.map_chunk(np.array([5, 6]))
+        assert m.to_internal(np.array([6, 5])).tolist() == [1, 0]
+        assert m.to_internal(np.array([6, 123]),
+                             missing="mark").tolist() == [1, -1]
+        with pytest.raises(KeyError, match="123"):
+            m.to_internal(np.array([123]))
+        with pytest.raises(ValueError, match="missing"):
+            m.to_internal(np.array([5]), missing="bogus")
+
+    @pytest.mark.parametrize("ids", [[10**12, 5, 7], ["a.com", "b.org"]])
+    def test_persistence_round_trip(self, ids, tmp_path):
+        m = NodeIdMapping()
+        m.map_chunk(np.array(ids))
+        p = str(tmp_path / "idmap.npz")
+        m.save(p)
+        m2 = NodeIdMapping.load(p)
+        np.testing.assert_array_equal(m2.external_ids, m.external_ids)
+        assert m2.to_internal(m.external_ids).tolist() == \
+            list(range(len(ids)))
+
+    def test_load_rejects_foreign_npz(self, tmp_path):
+        p = str(tmp_path / "not_idmap.npz")
+        np.savez(p, foo=np.arange(3))
+        with pytest.raises(ValueError, match="not a NodeIdMapping"):
+            NodeIdMapping.load(p)
+
+    def test_identity(self):
+        m = NodeIdMapping.identity(4)
+        assert m.to_internal(np.array([3, 0])).tolist() == [3, 0]
+
+
+# ------------------------------------------------------------ pipeline
+class TestPipeline:
+    def test_fixture_accounting_balances(self):
+        res = ingest_edge_list(FIXTURE, filters=[OFFSITE],
+                               self_loops="drop", dedup=True)
+        st = res.stats
+        assert st.edges_read == 295
+        assert st.edges_kept == (st.edges_read - st.filtered["offsite"]
+                                 - st.self_loops_removed
+                                 - st.duplicates_removed)
+        assert st.num_nodes == res.graph.num_nodes == res.idmap.num_nodes
+        assert res.virtual.counts == {"offsite": st.filtered["offsite"]}
+        # filtering BEFORE id mapping: offsite dsts never claim an id
+        assert res.idmap.external_ids.max() < 900_000_000
+
+    def test_self_loop_policies(self):
+        text = "1 1\n1 2\n2 1\n"
+        keep = ingest_edge_list(io.StringIO(text))
+        assert keep.stats.edges_kept == 3
+        drop = ingest_edge_list(io.StringIO(text), self_loops="drop")
+        assert drop.stats.edges_kept == 2
+        assert drop.stats.self_loops_removed == 1
+        virt = ingest_edge_list(io.StringIO(text), self_loops="virtual")
+        assert virt.virtual.counts == {"self_loops": 1}
+        with pytest.raises(ValueError, match="self_loops"):
+            ingest_edge_list(io.StringIO(text), self_loops="nuke")
+
+    def test_dedup_counts(self):
+        res = ingest_edge_list(io.StringIO("1 2\n1 2\n2 1\n"), dedup=True)
+        assert res.stats.duplicates_removed == 1
+        assert res.stats.edges_kept == 2
+
+    def test_non_virtual_filter_only_counts(self):
+        f = LinkFilter("spam", lambda s, d: s != 9, virtual=False)
+        res = ingest_edge_list(io.StringIO("1 2\n9 2\n2 1\n"),
+                               filters=[f])
+        assert res.stats.filtered["spam"] == 1
+        assert res.virtual.counts == {}
+
+    def test_duplicate_filter_names_rejected(self):
+        f = LinkFilter("x", lambda s, d: s == s)
+        with pytest.raises(ValueError, match="duplicate filter"):
+            ingest_edge_list(io.StringIO("1 2\n"), filters=[f, f])
+
+    def test_all_filtered_raises(self):
+        f = LinkFilter("all", lambda s, d: np.zeros(s.shape, bool))
+        with pytest.raises(ValueError, match="empty graph"):
+            ingest_edge_list(io.StringIO("1 2\n"), filters=[f])
+
+    def test_virtual_mass_hand_computed(self):
+        # kept graph: 10 <-> 20; virtual: 10 -> 999 (offsite).  Node 10
+        # would split damping*pr[10] over (1 kept + 1 virtual) links.
+        f = LinkFilter("offsite", lambda s, d: d < 900)
+        res = ingest_edge_list(io.StringIO("10 20\n20 10\n10 999\n"),
+                               filters=[f])
+        ref = pagerank_reference(res.graph, num_iterations=80)
+        mass = res.virtual_mass(ref)
+        pr10 = ref[res.idmap.to_internal(np.int64(10))]
+        assert mass["offsite"] == pytest.approx(0.85 * pr10 / 2)
+
+    def test_virtual_source_not_in_graph_contributes_nothing(self):
+        # 999 -> 5 is filtered and 999 never enters the graph: its rank
+        # is unknown, so its virtual edge must carry zero mass.
+        f = LinkFilter("off", lambda s, d: (s < 900) & (d < 900))
+        res = ingest_edge_list(io.StringIO("1 2\n2 1\n999 5\n"),
+                               filters=[f])
+        ref = pagerank_reference(res.graph, num_iterations=40)
+        assert res.virtual_mass(ref)["off"] == 0.0
+
+
+# -------------------------------------- end-to-end external-id parity
+@pytest.mark.parametrize("reorder", ["none", "hybrid"])
+def test_end_to_end_fixture_parity(reorder):
+    """The PR's acceptance test: fixture file -> full pipeline ->
+    solve + serve, all results in the file's ORIGINAL ids, matching
+    the dense float64 oracle."""
+    res = ingest_edge_list(FIXTURE, filters=[OFFSITE],
+                           self_loops="drop", dedup=True)
+    g = res.graph
+    ref = pagerank_reference(g, num_iterations=60)
+    sess = res.open(method="pcpm", part_size=16, num_iterations=60,
+                    tol=0.0, reorder=reorder, slots=2, chunk=4)
+    out = sess.pagerank()
+    np.testing.assert_allclose(np.asarray(out.ranks), ref, atol=1e-6,
+                               rtol=0)
+
+    ids, scores = sess.top_ranked(5)
+    expect_ext = res.idmap.to_external(oracle_top(ref, 5))
+    assert ids.tolist() == expect_ext.tolist()
+    np.testing.assert_allclose(scores, ref[oracle_top(ref, 5)],
+                               atol=1e-6)
+
+    sch = sess.serve()
+    uid_topk = sch.submit(top_k=5, tol=0.0, max_iters=60,
+                          route="stepper")
+    uid_full = sch.submit(tol=0.0, max_iters=60, route="stepper")
+    done = {r.uid: r for r in sch.run_until_drained()}
+    topk = done[uid_topk]
+    assert topk.error is None
+    assert topk.top_external is not None
+    assert sorted(topk.top_external.tolist()) == \
+        sorted(expect_ext.tolist())
+    full = done[uid_full]
+    np.testing.assert_allclose(np.asarray(full.ranks), ref, atol=1e-6,
+                               rtol=0)
+
+
+def test_push_route_speaks_external_ids():
+    """Personalized push queries on a reordered plan return the same
+    external top-k as on the unreordered plan."""
+    res = ingest_edge_list(FIXTURE, filters=[OFFSITE],
+                           self_loops="drop", dedup=True)
+    seed = np.zeros(res.graph.num_nodes, dtype=np.float32)
+    seed[res.idmap.to_internal(res.idmap.external_ids[3])] = 1.0
+    tops = {}
+    for reorder in ("none", "hybrid"):
+        sess = res.open(part_size=16, reorder=reorder, slots=2, chunk=4)
+        sch = sess.serve(route="push")
+        sch.submit(seed, top_k=5, tol=1e-4, max_iters=200)
+        sch.run_until_drained()
+        (q,) = sch.completed
+        assert q.error is None and q.top_external is not None
+        tops[reorder] = sorted(q.top_external.tolist())
+    assert tops["none"] == tops["hybrid"]
+
+
+# ----------------------------------------- reorder-in-plan wiring
+@pytest.fixture(scope="module")
+def rmat():
+    return generators.rmat(8, 6, seed=3)
+
+
+class TestReorderPlans:
+    @pytest.mark.parametrize("reorder", ["degree", "bfs", "hybrid"])
+    def test_engine_parity_each_ordering(self, rmat, reorder):
+        ref = pagerank_reference(rmat, num_iterations=40)
+        sess = repro.open(rmat, part_size=32, num_iterations=40,
+                          tol=0.0, reorder=reorder)
+        np.testing.assert_allclose(np.asarray(sess.pagerank().ranks),
+                                   ref, atol=1e-6, rtol=0)
+
+    def test_distinct_cache_entries_per_ordering(self, rmat):
+        # part_size distinct from every other test in this module so
+        # the cache-miss accounting below starts from a clean key
+        cfg = repro.EngineConfig(part_size=64)
+        p_none = build_plan(rmat, cfg.plan_config())
+        before = plan_cache_stats().plan_builds
+        p_hyb = build_plan(rmat,
+                           cfg.replace(reorder="hybrid").plan_config())
+        assert plan_cache_stats().plan_builds == before + 1
+        assert p_hyb is not p_none
+        assert p_none.reorder_perm is None
+        assert p_hyb.reorder_perm is not None
+        # reordered plan is stamped with the ORIGINAL graph fingerprint
+        assert p_hyb.graph_fp == p_none.graph_fp
+        # cache hit on repeat — the permutation is not recomputed
+        assert build_plan(rmat,
+                          cfg.replace(reorder="hybrid").plan_config()) \
+            is p_hyb
+
+    def test_unknown_ordering_rejected(self, rmat):
+        with pytest.raises(ValueError, match="reorder"):
+            repro.open(rmat, reorder="gorder")
+
+    def test_plan_save_load_round_trips_permutation(self, rmat,
+                                                    tmp_path):
+        cfg = repro.EngineConfig(part_size=32, reorder="hybrid")
+        plan = build_plan(rmat, cfg.plan_config())
+        p = str(tmp_path / "g.plan.npz")
+        plan.save(p)
+        loaded = load_plan(p)
+        np.testing.assert_array_equal(loaded.reorder_perm,
+                                      plan.reorder_perm)
+        assert loaded.config.reorder == "hybrid"
+        # warm-load: installing the persisted plan serves a session
+        # with zero fresh builds
+        install_plan(rmat, loaded)
+        before = plan_cache_stats().plan_builds
+        sess = repro.open(rmat, cfg)
+        assert plan_cache_stats().plan_builds == before
+        ref = pagerank_reference(rmat, num_iterations=40)
+        np.testing.assert_allclose(
+            np.asarray(sess.pagerank(num_iterations=40, tol=0.0).ranks),
+            ref, atol=1e-6, rtol=0)
+
+    def test_batch_server_speaks_original_ids(self, rmat):
+        """PageRankServer on a reordered plan: uniform AND
+        personalized queries come back in original-id order."""
+        sess = repro.open(rmat, part_size=32, num_iterations=40,
+                          tol=0.0, reorder="hybrid")
+        srv = sess.server(batch=1)
+        ref = pagerank_reference(rmat, num_iterations=40)
+        pr, _, _ = srv.query()
+        np.testing.assert_allclose(np.asarray(pr), ref, atol=1e-6,
+                                   rtol=0)
+        seeds = np.zeros(rmat.num_nodes, np.float32)
+        seeds[11] = 1.0
+        prs, _, _ = srv.query(seeds)
+        base = repro.open(rmat, part_size=32, num_iterations=40,
+                          tol=0.0).server(batch=1)
+        prb, _, _ = base.query(seeds)
+        np.testing.assert_allclose(np.asarray(prs), np.asarray(prb),
+                                   atol=1e-6, rtol=0)
+
+    def test_scheduler_apply_delta_guard(self, rmat):
+        from repro.stream import GraphDelta
+        sess = repro.open(rmat, part_size=32, reorder="degree",
+                          slots=2, chunk=4)
+        sch = sess.serve()
+        delta = GraphDelta.insert(np.array([[0, 5]], dtype=np.int32))
+        with pytest.raises(ValueError, match="reorder"):
+            sch.apply_delta(delta)
+
+    def test_session_delta_rebuilds_and_warm_falls_back(self, rmat):
+        from repro.stream import GraphDelta
+        sess = repro.open(rmat, part_size=32, num_iterations=40,
+                          tol=1e-10, reorder="degree")
+        sess.pagerank()
+        delta = GraphDelta.insert(
+            np.array([[1, 7], [3, 9]], dtype=np.int32))
+        sess.apply_delta(delta)
+        warm = sess.pagerank(warm=True)      # honest cold fallback
+        ref = pagerank_reference(sess.graph, num_iterations=40)
+        np.testing.assert_allclose(np.asarray(warm.ranks), ref,
+                                   atol=1e-6, rtol=0)

@@ -1,0 +1,83 @@
+"""Property tests for graphs/reorder.py (ISSUE 8 satellite).
+
+Every ordering must emit a VALID permutation on awkward graph shapes
+(disconnected components, multi-edges, isolated nodes, no edges at
+all), and relabeling must commute with PageRank: solving on the
+relabeled graph then mapping back equals solving on the original —
+the invariant the whole reorder-in-plan wiring rests on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pagerank_reference
+from repro.graphs import generators
+from repro.graphs.formats import Graph
+from repro.graphs.reorder import (ORDERINGS, available_orderings,
+                                  inverse_permutation,
+                                  reorder_permutation)
+
+ALL = sorted(ORDERINGS)
+
+
+def make_graphs():
+    e = lambda *pairs: np.array(pairs, dtype=np.int32)
+    cases = {}
+    # two components, neither reachable from the other
+    ed = e((0, 1), (1, 2), (2, 0), (3, 4), (4, 3))
+    cases["disconnected"] = Graph(5, ed[:, 0], ed[:, 1])
+    # multi-edges and a self-loop
+    ed = e((0, 1), (0, 1), (0, 1), (1, 0), (2, 2))
+    cases["multi_edge"] = Graph(3, ed[:, 0], ed[:, 1])
+    # nodes 5..9 appear in no edge at all
+    ed = e((0, 1), (1, 2), (2, 3), (3, 4), (4, 0))
+    cases["isolated_nodes"] = Graph(10, ed[:, 0], ed[:, 1])
+    empty = np.array([], dtype=np.int32)
+    cases["no_edges"] = Graph(4, empty, empty.copy())
+    cases["single_node"] = Graph(1, empty, empty.copy())
+    cases["rmat"] = generators.rmat(6, 4, seed=11)
+    return cases
+
+GRAPHS = make_graphs()
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("shape", sorted(GRAPHS))
+def test_valid_permutation(name, shape):
+    g = GRAPHS[shape]
+    perm = reorder_permutation(g, name)
+    assert perm.dtype == np.int32 and perm.shape == (g.num_nodes,)
+    assert sorted(perm.tolist()) == list(range(g.num_nodes))
+    inv = inverse_permutation(perm)
+    np.testing.assert_array_equal(perm[inv],
+                                  np.arange(g.num_nodes))
+    np.testing.assert_array_equal(inv[perm],
+                                  np.arange(g.num_nodes))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_memoized_on_graph_instance(name):
+    g = generators.rmat(5, 4, seed=2)
+    assert reorder_permutation(g, name) is reorder_permutation(g, name)
+
+
+def test_unknown_ordering_rejected():
+    with pytest.raises(ValueError, match="unknown ordering"):
+        reorder_permutation(GRAPHS["rmat"], "gorder")
+    assert available_orderings()[0] == "none"
+    assert set(available_orderings()) == {"none", *ALL}
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("shape",
+                         ["disconnected", "multi_edge",
+                          "isolated_nodes", "rmat"])
+def test_relabel_commutes_with_pagerank(name, shape):
+    """pr(relabel(g))[perm] == pr(g) to 1e-6 L-inf: degree structure
+    is label-invariant, so the float64 oracle on the relabeled graph,
+    mapped back, must reproduce the original solve."""
+    g = GRAPHS[shape]
+    perm = reorder_permutation(g, name)
+    pr = pagerank_reference(g, num_iterations=50)
+    pr_rel = pagerank_reference(g.relabel(perm), num_iterations=50)
+    # value of node u lives at slot perm[u] in the relabeled solve
+    assert np.abs(pr_rel[perm] - pr).max() <= 1e-6
