@@ -25,7 +25,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
                          "table7 dist e2e sharded serve serve_push "
-                         "stream locality")
+                         "serve_gateway stream locality")
     ap.add_argument("--reorder", default=None,
                     choices=["none", "degree", "bfs", "hybrid"],
                     help="add the plan-layer locality job, measuring "
@@ -65,7 +65,7 @@ def main(argv=None) -> int:
                    table6_comm_locality, fig12_partition_sweep,
                    table7_preproc, dist_wire, pagerank_e2e,
                    sharded_loop, serve_load, serve_push,
-                   stream_updates, locality)
+                   serve_gateway, stream_updates, locality)
     jobs = {
         "table4": lambda: table4_runtime.run(
             datasets, part_size=args.part_size),
@@ -88,6 +88,8 @@ def main(argv=None) -> int:
             datasets[:2], part_size=args.part_size),
         "serve_push": lambda: serve_push.run(
             datasets[:2], part_size=args.part_size),
+        "serve_gateway": lambda: serve_gateway.run(
+            datasets[:2], part_size=args.part_size),
         "stream": lambda: stream_updates.run(
             datasets[:1], part_size=args.part_size),
         # --reorder X measures just [none, X]; --only locality with no
@@ -99,13 +101,15 @@ def main(argv=None) -> int:
     }
     selected = args.only or [j for j in jobs
                              if j not in ("sharded", "serve",
-                                          "serve_push", "locality")]
+                                          "serve_push", "serve_gateway",
+                                          "locality")]
     if args.shards and "sharded" not in selected:
         selected = selected + ["sharded"]
     if args.reorder and "locality" not in selected:
         selected = selected + ["locality"]
     if args.serve:
-        selected = selected + [j for j in ("serve", "serve_push")
+        selected = selected + [j for j in ("serve", "serve_push",
+                                           "serve_gateway")
                                if j not in selected]
     if "sharded" in selected and args.shards is None:
         args.shards = 8          # job default, recorded in the JSON doc

@@ -1,0 +1,232 @@
+"""A/B benchmark: async gateway vs synchronous scheduler on a mixed
+push-eligible/stepper serving workload (repro/gateway, DESIGN.md §13).
+
+Three saturation runs per dataset, identical workload:
+
+- ``gateway/<ds>/sync``  — the PR 6 front door: one caller thread does
+  admission, stepping AND inline push serving, at the session's static
+  slot count.  This is the baseline the gateway must beat.
+- ``gateway/<ds>/cold``  — ``Session.gateway()``: autotuned slot pool,
+  dedicated device thread, push worker pool, empty warm-result cache.
+  Derived carries the speedup over sync — the acceptance headline.
+- ``gateway/<ds>/hot``   — the same workload resubmitted to the same
+  gateway: every query repeats, so the warm-result LRU answers in O(k)
+  without touching a solver.
+
+Latency is measured CALLER-side (submit to future-done callback), so
+gateway queue time counts against it — no hiding time in the backlog.
+
+Workload: distinct one-hot seeds; half are top-k at ``tol=1e-3`` (the
+push-eligible regime, served on the worker pool), half are FULL-VECTOR
+personalized queries at serve_load's alternating loose/tight
+tolerances — stepper-bound because they need the whole rank vector,
+which push cannot deliver.
+
+Standalone smoke mode (what CI runs after serve_load/serve_push):
+
+    PYTHONPATH=src python -m benchmarks.serve_gateway --smoke \
+        --json BENCH_serve.json
+
+``--json`` MERGES into an existing BENCH_serve.json (serve_load.py
+owns and overwrites that file; this module appends its rows).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+import repro
+from repro.gateway import GatewayConfig
+from repro.serve import ServeMetrics, SlotScheduler
+from repro.graphs import generators
+from .common import Csv, Dataset, suite
+
+PUSH_TOL = 1e-3           # >= scheduler push_tol -> worker-pool route
+STEP_TOLS = (1e-3, 1e-5)  # full-vector queries alternate loose/tight
+
+
+def _workload(n: int, num_queries: int, *, top_k: int, seed: int):
+    """(seeds, top_k, tol) tuples: distinct one-hot seeds (distinct
+    cache keys — the cold run must not get accidental hits), odd
+    indices push-eligible top-k, even indices full-vector
+    (stepper-bound at any tolerance)."""
+    rng = np.random.default_rng(seed)
+    nodes = rng.choice(n, size=min(num_queries, n), replace=False)
+    out = []
+    for i, node in enumerate(nodes):
+        s = np.zeros(n, np.float32)
+        s[node] = 1.0
+        out.append((s, top_k, PUSH_TOL) if i % 2 else
+                   (s, None, STEP_TOLS[(i // 2) % 2]))
+    return out
+
+
+def _percentiles(lat: list) -> tuple[float, float]:
+    a = np.asarray(lat)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def _drive_sync(sch: SlotScheduler, workload, *,
+                max_iters: int) -> dict:
+    t0 = time.perf_counter()
+    for s, k, tol in workload:
+        sch.submit(s, top_k=k, tol=tol, max_iters=max_iters)
+    sch.run_until_drained()
+    wall = time.perf_counter() - t0
+    res = sch.completed[-len(workload):]
+    assert all(r.error is None and r.converged for r in res)
+    p50, p99 = _percentiles([r.latency_s for r in res])
+    return {"qps": len(workload) / wall, "p50_s": p50, "p99_s": p99}
+
+
+def _drive_gateway(gw, workload, *, max_iters: int) -> dict:
+    """Open-loop saturation through the async front door; per-query
+    latency from submit() to the future's done callback."""
+    lat = [None] * len(workload)
+    results = [None] * len(workload)
+
+    def cb(i, t_sub):
+        def _done(fut):
+            lat[i] = time.perf_counter() - t_sub
+            results[i] = fut.result()
+        return _done
+
+    t0 = time.perf_counter()
+    futs = []
+    for i, (s, k, tol) in enumerate(workload):
+        t_sub = time.perf_counter()
+        f = gw.submit(s, top_k=k, tol=tol, max_iters=max_iters)
+        f.add_done_callback(cb(i, t_sub))
+        futs.append(f)
+    for f in futs:
+        f.result(timeout=600)
+    wall = time.perf_counter() - t0
+    assert all(r.error is None and r.converged for r in results)
+    p50, p99 = _percentiles(lat)
+    return {"qps": len(workload) / wall, "p50_s": p50, "p99_s": p99,
+            "cached": sum(r.cached for r in results)}
+
+
+def run(datasets: list[Dataset], *, slots: int = 4,
+        num_queries: int = 400, chunk: int = 4,
+        part_size: int = 65536, top_k: int = 16, max_iters: int = 400,
+        target_chunk_s: float = 0.025, seed: int = 0) -> Csv:
+    csv = Csv()
+    for ds in datasets:
+        workload = _workload(ds.n, num_queries, top_k=top_k, seed=seed)
+        warm = workload[: 2]          # one per route, off the clock
+
+        # -- A: synchronous scheduler, static slot count ------------
+        sch = SlotScheduler(ds.graph, slots=slots, method="pcpm",
+                            part_size=part_size, chunk=chunk,
+                            metrics=ServeMetrics())
+        for s, k, tol in warm:
+            sch.submit(s, top_k=k, tol=tol, max_iters=max_iters)
+        sch.run_until_drained()
+        sync = _drive_sync(sch, workload, max_iters=max_iters)
+        assert sch.trace_count == 1, "sync scheduler retraced"
+        csv.add(f"gateway/{ds.name}/sync", sync["p50_s"],
+                f"qps={sync['qps']:.1f},p99_ms={sync['p99_s']*1e3:.2f}"
+                f",B={slots}")
+
+        # -- B: gateway, autotuned pool, cold then hot cache --------
+        sess = repro.open(ds.graph, repro.EngineConfig(
+            method="pcpm", part_size=part_size, chunk=chunk,
+            slots=slots))
+        cfg = GatewayConfig(target_chunk_s=target_chunk_s,
+                            push_workers=2)
+        with sess.gateway(config=cfg) as gw:
+            gsch = gw._schedulers["default"]
+            for s, k, tol in warm:
+                gw.submit(s, top_k=k, tol=tol, max_iters=max_iters,
+                          use_cache=False).result(timeout=600)
+            cold = _drive_gateway(gw, workload, max_iters=max_iters)
+            hot = _drive_gateway(gw, workload, max_iters=max_iters)
+            chosen = gw.autotune_report.chosen
+            assert gsch.trace_count == 1, "gateway scheduler retraced"
+        assert cold["cached"] == 0
+        csv.add(
+            f"gateway/{ds.name}/cold", cold["p50_s"],
+            f"qps={cold['qps']:.1f},p99_ms={cold['p99_s']*1e3:.2f}"
+            f",B={chosen},speedup_vs_sync="
+            f"{cold['qps'] / sync['qps']:.1f}x")
+        csv.add(
+            f"gateway/{ds.name}/hot", hot["p50_s"],
+            f"qps={hot['qps']:.1f},p99_ms={hot['p99_s']*1e3:.2f}"
+            f",cache_hits={hot['cached']},hit_rate="
+            f"{hot['cached'] / len(workload):.2f}")
+    return csv
+
+
+def _merge_json(path: str, rows, meta: dict) -> None:
+    """Append gateway rows into BENCH_serve.json without disturbing
+    the serve_load/serve_push rows it already holds."""
+    doc = {}
+    if os.path.exists(path) and os.path.getsize(path) > 0:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except json.JSONDecodeError:
+            doc = {}
+    kept = [r for r in doc.get("rows", [])
+            if not r["name"].startswith("gateway/")]
+    doc["rows"] = kept + [{"name": n, "us_per_call": round(us, 1),
+                           "derived": derived}
+                          for n, us, derived in rows]
+    doc["gateway_ab"] = meta
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="sync baseline pool size (gateway autotunes)")
+    ap.add_argument("--num-queries", type=int, default=400)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--top-k", type=int, default=16)
+    ap.add_argument("--target-chunk-s", type=float, default=0.025)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one small RMAT graph")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="merge rows into an existing "
+                         "BENCH_serve.json (append, not overwrite)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    if args.smoke:
+        g = generators.rmat(10, 8, seed=1)
+        datasets = [Dataset("rmat_smoke", g)]
+        part_size = 64
+    else:
+        datasets = suite(args.scale)[:2]
+        from .common import default_part_size
+        part_size = default_part_size(1 << args.scale)
+    print("name,us_per_call,derived")
+    out = run(datasets, slots=args.slots,
+              num_queries=args.num_queries, chunk=args.chunk,
+              part_size=part_size, top_k=args.top_k,
+              target_chunk_s=args.target_chunk_s)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s, {len(out.rows)} rows", flush=True)
+    if args.json:
+        _merge_json(args.json, out.rows, meta={
+            "smoke": args.smoke, "sync_slots": args.slots,
+            "num_queries": args.num_queries, "chunk": args.chunk,
+            "top_k": args.top_k,
+            "target_chunk_s": args.target_chunk_s,
+            "push_tol": PUSH_TOL, "step_tols": list(STEP_TOLS),
+            "total_seconds": round(total_s, 1),
+        })
+        print(f"# merged into {args.json}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,14 @@ slot, no batching wait — while tight-tolerance queries on the SAME
 scheduler still take the masked chunk stepper.  Prints the per-route
 throughput and the top-k agreement between the two routes.
 
+``--gateway`` runs the async front-door demo instead (DESIGN.md §13):
+``Session.gateway()`` probes the measured stepper cost and autotunes
+the slot-pool size, four submitter threads get futures back
+immediately (push-eligible traffic on the worker pool, full-vector
+queries interleaved on the device thread), a repeated query is served
+bit-identically from the warm-result cache, and a live edge delta
+invalidates exactly the dead cache entries while traffic continues.
+
 ``--chaos`` runs the resilience demo instead (DESIGN.md §10): the
 same serving pool under injected faults — a NaN poisons a slot column
 mid-flight (quarantined + re-admitted from its clean seed), a device
@@ -147,6 +155,89 @@ def push(args):
           "queries served host-side without touching a device slot")
 
 
+def gateway(args):
+    """Async front-door demo (DESIGN.md §13): autotuned slot pool,
+    concurrent submitters getting futures, warm-result cache hits, and
+    a live delta invalidating the cache mid-traffic."""
+    import threading
+    import time
+
+    g = generators.rmat(args.scale, 16, seed=7)
+    part_size = max(64, g.num_nodes // 64)
+    sess = repro.open(g, repro.EngineConfig(
+        method="pcpm", part_size=part_size, chunk=4, slots=args.slots))
+    rng = np.random.default_rng(0)
+    nodes = rng.choice(g.num_nodes, size=args.queries, replace=False)
+
+    def one_hot(node):
+        s = np.zeros(g.num_nodes, np.float32)
+        s[node] = 1.0
+        return s
+
+    with sess.gateway() as gw:
+        rep = gw.autotune_report
+        print(f"autotune: probes(ms)="
+              f"{ {b: round(t * 1e3, 2) for b, t in rep.probes.items()} } "
+              f"target={rep.target_chunk_s * 1e3:.0f}ms -> B={rep.chosen} "
+              f"(session default was {args.slots})")
+
+        # N submitter threads, futures back immediately; half the
+        # traffic is push-eligible top-k, half full-vector stepper
+        results, lock = [], threading.Lock()
+
+        def client(lo, hi):
+            futs = [gw.submit(one_hot(nodes[i]),
+                              top_k=10 if i % 2 else None,
+                              tol=1e-3 if i % 2 else 1e-5,
+                              max_iters=300)
+                    for i in range(lo, hi)]
+            got = [f.result(timeout=300) for f in futs]
+            with lock:
+                results.extend(got)
+
+        t0 = time.perf_counter()
+        q4 = args.queries // 4
+        threads = [threading.Thread(target=client,
+                                    args=(i * q4, (i + 1) * q4))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        assert all(r.error is None for r in results)
+        assert len({r.uid for r in results}) == len(results)
+        print(f"4 threads, {len(results)} queries in {dt * 1e3:.0f}ms "
+              f"({len(results) / dt:.0f} qps), all converged, "
+              f"uids unique")
+
+        # a repeat is a warm-result hit: O(k), bit-identical arrays
+        r1 = gw.submit(one_hot(nodes[1]), top_k=10,
+                       tol=1e-3, max_iters=300).result(timeout=300)
+        assert r1.cached and r1.top_ids is not None
+        print(f"repeat query: cached={r1.cached} "
+              f"(cache: {gw.stats()['cache']})")
+
+        # live delta: plan patched between chunks, cache entries for
+        # the outgoing fingerprint dropped atomically
+        k = max(4, g.num_edges // 1000)
+        delta = repro.GraphDelta.insert(
+            np.stack([rng.integers(0, g.num_nodes, k),
+                      rng.integers(0, g.num_nodes, k)], axis=1))
+        dropped = gw.apply_delta(delta).result(timeout=300)
+        r2 = gw.submit(one_hot(nodes[1]), top_k=10,
+                       tol=1e-3, max_iters=300).result(timeout=300)
+        sch = gw._schedulers["default"]
+        print(f"±{k}-edge delta: {dropped} cache entries invalidated, "
+              f"repeat recomputed (cached={r2.cached}), "
+              f"rebinds={sch.rebind_count}")
+        assert not r2.cached
+        assert sch.trace_count == 1 + sch.rebind_count
+        assert sch.admit_trace_count == 1
+    print("gateway demo OK: futures front door, autotuned pool, "
+          "warm-result cache with delta invalidation — zero retraces")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
@@ -158,11 +249,15 @@ def main():
     ap.add_argument("--push", action="store_true",
                     help="run the forward-push query routing demo "
                          "(DESIGN.md §11)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="run the async gateway demo (DESIGN.md §13)")
     args = ap.parse_args()
     if args.chaos:
         return chaos(args)
     if args.push:
         return push(args)
+    if args.gateway:
+        return gateway(args)
 
     kron = generators.rmat(args.scale, 16, seed=7)
     plaw = generators.power_law(1 << args.scale, 14, seed=3)

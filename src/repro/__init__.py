@@ -14,6 +14,7 @@ registry all consumers dispatch through) — see DESIGN.md §8.
 from .api import EngineConfig, Session, open
 from .core.backends import (Backend, available_backends, get_backend,
                             register_backend)
+from .gateway import Gateway, GatewayConfig
 from .ingest import (LinkFilter, NodeIdMapping, VirtualLinks,
                      ingest_edge_list)
 from .core.plan import (GraphPlan, PlanConfig, build_plan,
@@ -27,6 +28,7 @@ __all__ = [
     "Backend", "available_backends", "get_backend", "register_backend",
     "GraphPlan", "PlanConfig", "build_plan", "clear_plan_cache",
     "evict_plans", "install_plan", "plan_cache_stats",
+    "Gateway", "GatewayConfig",
     "ResilienceConfig", "check_plan_integrity",
     "DynamicGraph", "GraphDelta",
     "LinkFilter", "NodeIdMapping", "VirtualLinks", "ingest_edge_list",

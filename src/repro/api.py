@@ -174,13 +174,13 @@ class Session:
         kw.update(overrides)
         key = (kw["damping"], kw["dangling"])
         tol, budget = kw["tol"], kw["num_iterations"]
-        # reordered plans take the cold path: the residual-push updater
-        # runs against the plan's internal-space streams while the
-        # stored warm state is original-space — an honest fallback, not
-        # a silent mix of id spaces
+        # reordered plans warm-start too: update_ranks composes the
+        # stored original-space ranks through ``reorder_perm`` into the
+        # plan's internal space and gathers the result back, so only
+        # the labeling differs — the honest fallback below remains for
+        # unconverged/mismatched state, never for reordering alone
         if warm and self._solved_ranks is not None \
                 and self._solved_key == key \
-                and self.plan.reorder_perm is None \
                 and 0.0 < tol and self._solved_res <= tol:
             from .stream.delta import GraphDelta
             from .stream.incremental import update_ranks
@@ -292,6 +292,36 @@ class Session:
                   dangling=cfg.dangling, route=route, idmap=self.idmap)
         kw.update(overrides)
         return SlotScheduler(self.graph, engine=self.engine, **kw)
+
+    def gateway(self, *, config=None, autotune: bool = True,
+                **overrides):
+        """An async serving front door over this session's plan
+        (DESIGN.md §13): a dedicated device thread steps the slot
+        pool, a worker pool answers push-eligible queries inline, and
+        ``submit()`` returns a future immediately with a warm-result
+        LRU serving repeats in O(k).
+
+        ``autotune=True`` (default) probes the engine's measured
+        multi-vector SpMV cost and sizes the slot pool against
+        ``config.target_chunk_s`` instead of the session's static
+        ``slots``; an explicit ``slots=`` override always wins.  The
+        chosen size and the probe curve are attached as
+        ``gateway.autotune_report``."""
+        from .gateway import Gateway, GatewayConfig, autotune_slots
+        cfg = config or GatewayConfig()
+        report = None
+        if autotune and "slots" not in overrides:
+            report = autotune_slots(
+                self.engine, chunk=overrides.get("chunk",
+                                                 self.config.chunk),
+                target_chunk_s=cfg.target_chunk_s,
+                candidates=cfg.autotune_candidates,
+                default=self.config.slots)
+            overrides["slots"] = report.chosen
+        sch = self.serve(**overrides)
+        gw = Gateway(sch, config=cfg)
+        gw.autotune_report = report
+        return gw
 
     def server(self, *, batch: int = 1, **overrides):
         """An AOT-compiled lockstep ``PageRankServer`` sharing this

@@ -508,6 +508,37 @@ def reorder_inverse(plan: GraphPlan) -> np.ndarray:
     return inv
 
 
+def plan_nbytes(plan: GraphPlan) -> int:
+    """Host-side footprint of a plan in bytes — the sum of every array
+    ``save`` would persist.  This is what a multi-graph registry's
+    memory budget accounts against (serve/scheduler.py GraphRegistry):
+    the plan streams dominate a resident graph's cost, and unlike
+    device buffers they are exactly enumerable."""
+    arrays: list[np.ndarray] = []
+    if plan.reorder_perm is not None:
+        arrays.append(plan.reorder_perm)
+    for key in ("csc_src", "csc_dst", "bv_src", "bv_dst"):
+        arr = getattr(plan, key)
+        if arr is not None:
+            arrays.append(arr)
+    if plan.png is not None:
+        p = plan.png
+        arrays += [p.update_src, p.update_offsets, p.edge_update_idx,
+                   p.edge_dst, p.edge_offsets]
+    if plan.schedule is not None:
+        s = plan.schedule
+        arrays += [s.edge_update_idx_padded, s.piece_start,
+                   s.piece_end, s.piece_dst]
+    if plan.blocked is not None:
+        b = plan.blocked
+        arrays += [b.update_src, b.edge_update_local, b.edge_dst_local]
+    if plan.sharded is not None:
+        h = plan.sharded
+        arrays += [h.send_ids, h.edge_upd, h.edge_dst, h.eui_padded,
+                   h.piece_start, h.piece_end, h.piece_dst]
+    return sum(int(np.asarray(a).nbytes) for a in arrays)
+
+
 def _chain_fingerprints(fp: str) -> set[str]:
     """Every fingerprint connected to ``fp`` through cached plans'
     ``parent_fp`` links (both directions, transitively).  A stream of

@@ -27,3 +27,16 @@ def load_plan(path: str):
     ``core.plan.install_plan`` to seed the process plan cache."""
     from ..core.plan import GraphPlan
     return GraphPlan.load(path)
+
+
+def nbytes(path: str) -> int:
+    """UNCOMPRESSED in-memory footprint of a persisted graph or plan
+    npz — summed from the zip members' declared sizes WITHOUT loading
+    any array.  What a registry operator uses to capacity-plan a
+    ``GraphRegistry(memory_budget_bytes=...)`` before warm-loading:
+    the budget accounts resident plan bytes (``core.plan.plan_nbytes``),
+    and this is the same number read off disk."""
+    import zipfile
+    with zipfile.ZipFile(path) as zf:
+        return sum(info.file_size for info in zf.infolist()
+                   if not info.filename.startswith("__meta__"))

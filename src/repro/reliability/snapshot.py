@@ -78,22 +78,29 @@ def snapshot_scheduler(sch, path: str) -> None:
     — they were already delivered."""
     from ..core.plan import graph_fingerprint
     import jax.numpy as jnp  # noqa: F401  (sch executables live on jax)
-    now = sch.clock()
-    specs, seeds, cols = [], [], []
-    for slot, q in enumerate(sch._slot_query):
-        if q is None:
-            continue
-        col = np.asarray(sch._extract_c(
-            sch._pr, sch._put_small(np.int32(slot))), dtype=np.float32)
-        specs.append((q, int(sch._iters[slot]), True))
-        seeds.append(q.seed if q.seed is not None
-                     else np.zeros(sch._n_pad, np.float32))
-        cols.append(col)
-    for q in sch._queue:
-        specs.append((q, 0, False))
-        seeds.append(q.seed if q.seed is not None
-                     else np.zeros(sch._n_pad, np.float32))
-        cols.append(np.zeros(sch._n_pad, np.float32))
+    # consistent cut under live gateway traffic: hold the step lock so
+    # no chunk advances mid-snapshot (a half-stepped pool would pair
+    # pre-step iteration counts with post-step columns) and the intake
+    # lock so the queue doesn't shift while it's being walked.  Lock
+    # order (step, then intake) matches step()/apply_delta.
+    with sch._step_lock, sch._lock:
+        now = sch.clock()
+        specs, seeds, cols = [], [], []
+        for slot, q in enumerate(sch._slot_query):
+            if q is None:
+                continue
+            col = np.asarray(sch._extract_c(
+                sch._pr, sch._put_small(np.int32(slot))),
+                dtype=np.float32)
+            specs.append((q, int(sch._iters[slot]), True))
+            seeds.append(q.seed if q.seed is not None
+                         else np.zeros(sch._n_pad, np.float32))
+            cols.append(col)
+        for q in sch._queue:
+            specs.append((q, 0, False))
+            seeds.append(q.seed if q.seed is not None
+                         else np.zeros(sch._n_pad, np.float32))
+            cols.append(np.zeros(sch._n_pad, np.float32))
     k = len(specs)
     meta = {"version": SNAPSHOT_VERSION,
             "graph_fp": graph_fingerprint(sch.g),

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -69,43 +70,62 @@ class ServeMetrics:
     The clock is injectable so tests can drive deterministic times;
     schedulers share it for deadline arithmetic so a fake clock drives
     the whole admission path.
+
+    Thread-safe: the recorder is shared between a scheduler's device
+    loop and the gateway's submit/worker threads (repro.gateway), so
+    every mutation — trace writes and counter increments — happens
+    under one internal lock.  ``Counter[name] += 1`` in particular is
+    a read-modify-write that silently loses updates under free-running
+    threads (the pre-gateway accounting bug).
     """
 
     def __init__(self, clock=time.perf_counter):
         self.clock = clock
         self.traces: dict[int, QueryTrace] = {}
         self.counters: collections.Counter = collections.Counter()
+        self._lock = threading.Lock()
 
     def submitted(self, uid: int) -> None:
-        self.traces[uid] = QueryTrace(uid, self.clock())
+        with self._lock:
+            self.traces[uid] = QueryTrace(uid, self.clock())
 
     def admitted(self, uid: int) -> None:
         """Record FIRST admission only: a quarantine re-admission (or
         a push fallback re-entering the stepper) re-runs the admit
         path, and letting it overwrite ``t_admit`` would under-report
         queue wait exactly for the queries that needed retries."""
-        tr = self.traces[uid]
-        if tr.t_admit is None:
-            tr.t_admit = self.clock()
+        with self._lock:
+            tr = self.traces[uid]
+            if tr.t_admit is None:
+                tr.t_admit = self.clock()
 
     def completed(self, uid: int, *, iterations: int, converged: bool,
                   error: Optional[str] = None,
                   degraded: bool = False) -> None:
-        tr = self.traces[uid]
-        tr.t_done = self.clock()
-        tr.iterations = iterations
-        tr.converged = converged
-        tr.error = error
-        tr.degraded = degraded
+        with self._lock:
+            tr = self.traces[uid]
+            tr.t_done = self.clock()
+            tr.iterations = iterations
+            tr.converged = converged
+            tr.error = error
+            tr.degraded = degraded
 
     def incr(self, name: str, n: int = 1) -> None:
         """Count one resilience event (rejection, expiry, degradation,
         quarantine, ...)."""
-        self.counters[name] += n
+        with self._lock:
+            self.counters[name] += n
+
+    def _trace_snapshot(self) -> list[QueryTrace]:
+        """Consistent read of the trace table — iterating the live dict
+        while a submit thread inserts would raise mid-iteration."""
+        with self._lock:
+            return list(self.traces.values())
 
     @property
     def completed_count(self) -> int:
-        return sum(tr.t_done is not None for tr in self.traces.values())
+        return sum(tr.t_done is not None
+                   for tr in self._trace_snapshot())
 
     def percentile(self, q: float, *, of: str = "latency"
                    ) -> Optional[float]:
@@ -113,7 +133,7 @@ class ServeMetrics:
         ``of`` is ``"latency"`` (submit->done) or ``"queue"``
         (submit->admit).  ``None`` on an empty recorder — the honest
         answer, not 0.0."""
-        done = [tr for tr in self.traces.values()
+        done = [tr for tr in self._trace_snapshot()
                 if tr.t_done is not None and tr.error is None]
         if of == "latency":
             vals = sorted(tr.latency_s for tr in done)
@@ -125,14 +145,17 @@ class ServeMetrics:
         return _percentile(vals, q)
 
     def summary(self) -> dict:
-        done = [tr for tr in self.traces.values() if tr.t_done is not None]
+        with self._lock:
+            traces = list(self.traces.values())
+            counters = dict(self.counters)
+        done = [tr for tr in traces if tr.t_done is not None]
         served = [tr for tr in done if tr.error is None]
         base = {
             "count": len(done),
             "served_count": len(served),
             "error_count": len(done) - len(served),
             "degraded_count": sum(tr.degraded for tr in done),
-            "counters": dict(self.counters),
+            "counters": counters,
         }
         if not served:
             base.update({"qps": None, "p50_ms": None, "p99_ms": None,

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from typing import Optional
 
@@ -59,7 +60,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.backends import resolve_engine
-from ..core.plan import install_plan, internal_graph, reorder_inverse
+from ..core.plan import (install_plan, internal_graph, plan_nbytes,
+                         reorder_inverse)
 from ..core.pagerank import _inv_degree, masked_chunk_stepper
 from ..core.spmv import SpMVEngine
 from ..graphs.formats import Graph, validate_graph
@@ -73,6 +75,15 @@ from .topk import make_slot_topk
 # process-global: uids stay unique even when several schedulers (e.g.
 # a GraphRegistry's) share one ServeMetrics, whose traces key on uid
 _uid_counter = itertools.count()
+_uid_lock = threading.Lock()
+
+
+def next_uid() -> int:
+    """Allocate one process-unique query uid.  The gateway mints uids
+    for queries it terminates itself (cache hits, backlog rejections)
+    so they share the schedulers' uid space."""
+    with _uid_lock:
+        return next(_uid_counter)
 
 
 def ensure_uid_floor(floor: int) -> None:
@@ -80,8 +91,9 @@ def ensure_uid_floor(floor: int) -> None:
     snapshot restore keeps the restored queries' uids, so fresh
     submissions must never collide with them."""
     global _uid_counter
-    nxt = next(_uid_counter)
-    _uid_counter = itertools.count(max(nxt, floor))
+    with _uid_lock:
+        nxt = next(_uid_counter)
+        _uid_counter = itertools.count(max(nxt, floor))
 
 
 @dataclasses.dataclass
@@ -130,6 +142,9 @@ class QueryResult:
     top_external: Optional[np.ndarray] = None
     error: Optional[str] = None               # explicit terminal failure
     degraded: bool = False                    # approximate-answer mode
+    # served from the gateway's warm-result cache (repro.gateway):
+    # the arrays are the cached solve's, bit-identical, O(k) to serve
+    cached: bool = False
 
 
 class SlotScheduler:
@@ -199,7 +214,18 @@ class SlotScheduler:
         # query the push couldn't close (geometric contraction means
         # ~log(tol)/log(d) sweeps suffice at the routed tolerances)
         self.push_max_sweeps = int(push_max_sweeps)
-        self._push = None
+        # threading contract (DESIGN.md §13): ``submit`` is safe from
+        # any thread — the intake lock guards the queue, the completed
+        # list and the metrics/terminal commit; push COMPUTE runs
+        # outside it on per-thread engines (the PushQueryEngine's
+        # ping-pong scratch buffers are single-query state), keyed by a
+        # generation that ``apply_delta`` bumps so every thread rebuilds
+        # on the new CSR.  ``step()`` stays single-caller (enforced via
+        # ``_step_lock``): exactly one device thread owns the slot pool.
+        self._lock = threading.RLock()
+        self._step_lock = threading.Lock()
+        self._push_tls = threading.local()
+        self._push_gen = 0
 
         B = slots
         if self.sharded:
@@ -398,11 +424,21 @@ class SlotScheduler:
         except Exception:
             self.metrics.incr("delta_failures")
             raise
-        self.g = g_new
-        self.engine = new_engine
-        self._step_c, self._inv_deg = step_c, inv_deg
-        self._push = None             # push state indexes the old CSR
-        self.rebind_count += 1
+        # commit under both locks: the step thread must not dispatch
+        # against a half-swapped (plan, stepper, inv_deg) triple, and
+        # submit threads must not route against a stale engine.  Lock
+        # order (step, then intake) matches step() — no deadlock.
+        with self._step_lock, self._lock:
+            self.g = g_new
+            self.engine = new_engine
+            self._step_c, self._inv_deg = step_c, inv_deg
+            # push engines index the graph's CSR: refresh the internal
+            # graph (it used to go stale here — rebuilt push engines
+            # silently answered against the PRE-delta edges) and bump
+            # the generation so every thread-local engine rebuilds
+            self._g_int = internal_graph(g_new, new_engine.plan)
+            self._push_gen += 1
+            self.rebind_count += 1
 
     # ------------------------------------------------------------ intake
     def submit(self, seeds: np.ndarray | None = None, *,
@@ -432,7 +468,51 @@ class SlotScheduler:
         and full, the query is REJECTED EXPLICITLY: it completes
         immediately with ``QueryResult.error`` set and the rejection
         counted — the uid is still returned so the caller can find the
-        terminal result."""
+        terminal result.
+
+        Thread-safe: intake state commits under the scheduler's lock;
+        push compute runs outside it on a per-thread engine, so
+        concurrent submitters never serialize behind each other's
+        push solves (only behind the microsecond bookkeeping)."""
+        route, use_push = self.validate_request(
+            seeds is not None, top_k=top_k, tol=tol,
+            max_iters=max_iters, route=route)
+        seed = None
+        if seeds is not None:
+            seed = _normalize_teleport(
+                np.asarray(seeds, dtype=np.float32).reshape(self.n))
+            if self._perm is not None:
+                seed = seed[self._inv]        # into internal space
+            if self._n_pad != self.n:
+                seed = np.pad(seed, (0, self._n_pad - self.n))
+        if deadline_s is None:
+            deadline_s = self.resilience.default_deadline_s
+        with self._lock:
+            deadline = (self.clock() + deadline_s
+                        if deadline_s is not None else None)
+            uid = next_uid()
+            q = Query(uid, seed, top_k, float(tol), int(max_iters),
+                      deadline, int(priority))
+            self.metrics.submitted(uid)
+        if use_push and self._serve_push(q):
+            return uid                # answered inline, never queued
+        with self._lock:
+            cap = self.resilience.max_queue
+            if cap is not None and len(self._queue) >= cap:
+                self.metrics.incr("rejected")
+                self._terminal(q, error=f"rejected: admission queue "
+                                        f"full ({cap})")
+                return uid
+            self._queue.append(q)
+        return uid
+
+    def validate_request(self, have_seed: bool, *, top_k, tol,
+                         max_iters, route=None) -> tuple[str, bool]:
+        """Validate a request exactly as ``submit`` will — raising the
+        same errors — and resolve its routing WITHOUT allocating a uid
+        or touching scheduler state.  Returns ``(route, use_push)``.
+        The gateway calls this on the submitter's thread so invalid
+        requests fail synchronously instead of poisoning a future."""
         if max_iters < 0:
             raise ValueError(f"max_iters must be >= 0; got {max_iters}")
         if top_k is not None and not 1 <= top_k <= self.n:
@@ -442,38 +522,13 @@ class SlotScheduler:
         if route not in ("auto", "push", "stepper"):
             raise ValueError(f"route must be 'auto', 'push' or "
                              f"'stepper'; got {route!r}")
-        seed = None
-        if seeds is not None:
-            seed = _normalize_teleport(
-                np.asarray(seeds, dtype=np.float32).reshape(self.n))
-            if self._perm is not None:
-                seed = seed[self._inv]        # into internal space
-            if self._n_pad != self.n:
-                seed = np.pad(seed, (0, self._n_pad - self.n))
         if route == "push":
-            self._check_push_request(seed, tol, max_iters)
+            self._check_push_request(have_seed, tol, max_iters)
         use_push = (route == "push"
                     or (route == "auto"
-                        and self._push_eligible(seed, top_k, tol,
+                        and self._push_eligible(have_seed, top_k, tol,
                                                 max_iters)))
-        if deadline_s is None:
-            deadline_s = self.resilience.default_deadline_s
-        deadline = (self.clock() + deadline_s
-                    if deadline_s is not None else None)
-        uid = next(_uid_counter)
-        q = Query(uid, seed, top_k, float(tol), int(max_iters),
-                  deadline, int(priority))
-        self.metrics.submitted(uid)
-        if use_push and self._serve_push(q):
-            return uid                # answered inline, never queued
-        cap = self.resilience.max_queue
-        if cap is not None and len(self._queue) >= cap:
-            self.metrics.incr("rejected")
-            self._terminal(q, error=f"rejected: admission queue full "
-                                    f"({cap})")
-            return uid
-        self._queue.append(q)
-        return uid
+        return route, use_push
 
     # --------------------------------------------------- push routing
     def _push_supported(self) -> bool:
@@ -481,18 +536,18 @@ class SlotScheduler:
                 and self.engine.backend.supports_push_query
                 and self.dangling == "none")
 
-    def _push_eligible(self, seed, top_k, tol, max_iters) -> bool:
+    def _push_eligible(self, have_seed, top_k, tol, max_iters) -> bool:
         """route="auto" rule: push serves single-seed TOP-K queries at
         LOOSE tolerance — the regime where expanding one seed's
         frontier beats a full (n, B) iteration; full-vector and
         tight-tolerance queries keep the stepper's accuracy/amortized
         cost."""
         return (self._push_supported()
-                and seed is not None and top_k is not None
+                and have_seed and top_k is not None
                 and 0.0 < self.push_tol <= tol
                 and max_iters > 0)
 
-    def _check_push_request(self, seed, tol, max_iters) -> None:
+    def _check_push_request(self, have_seed, tol, max_iters) -> None:
         """route="push" validation — raises BEFORE a uid is allocated,
         so an unservable explicit request never produces a trace."""
         if self.sharded:
@@ -505,7 +560,7 @@ class SlotScheduler:
         if self.dangling != "none":
             raise ValueError("route='push' requires dangling='none'; "
                              f"got {self.dangling!r}")
-        if seed is None:
+        if not have_seed:
             raise ValueError("route='push' needs a seed: push expands "
                              "a personalized frontier (uniform "
                              "teleport is a full-vector solve)")
@@ -515,15 +570,23 @@ class SlotScheduler:
                              "stepper's)")
 
     def _push_engine(self):
-        if self._push is None:
+        """Per-thread push engine: the PushQueryEngine's preallocated
+        ping-pong scratch is single-query state, so concurrent
+        submitters each get their own, rebuilt when ``apply_delta``
+        bumps the generation (the engine indexes the graph's CSR)."""
+        tls = self._push_tls
+        with self._lock:              # consistent (gen, graph, engine)
+            gen, g_int, spmv = self._push_gen, self._g_int, self.engine
+        if getattr(tls, "gen", None) != gen:
             from .push import PushQueryEngine
             # built on the INTERNAL graph so push estimates are
             # column-compatible with the stepper's slot space (the
             # warm-start fallback writes them straight into a column)
-            self._push = PushQueryEngine(
-                self._g_int, self.engine, damping=self.damping,
+            tls.engine = PushQueryEngine(
+                g_int, spmv, damping=self.damping,
                 dangling=self.dangling, mode=self.push_mode)
-        return self._push
+            tls.gen = gen
+        return tls.engine
 
     # ---------------------------------------------- id-space boundary
     def _vec_to_original(self, vec: np.ndarray) -> np.ndarray:
@@ -579,7 +642,8 @@ class SlotScheduler:
                 self.metrics.traces[q.uid].latency_s,
                 ranks=self._vec_to_original(res.estimate),
                 degraded=q.degraded)
-        self.completed.append(result)
+        with self._lock:
+            self.completed.append(result)
         return True
 
     @property
@@ -693,16 +757,37 @@ class SlotScheduler:
         """Admit from the queue, advance every active slot by up to
         ``chunk`` masked iterations (ONE stepper dispatch), drain slots
         that froze.  Returns the number of queries completed (including
-        any finished at admission, e.g. ``max_iters=0``)."""
-        before = len(self.completed)
-        self._step_idx += 1
-        self._admit_from_queue()
-        if not self._active.any():
-            return len(self.completed) - before
-        if self._injector is not None:
-            self._inject_poisons()
-        budget = np.minimum(self._max_iters - self._iters,
-                            np.iinfo(np.int32).max).astype(np.int32)
+        any finished at admission, e.g. ``max_iters=0``).
+
+        Single-caller: slot/device state belongs to exactly one
+        stepping thread (the gateway's device loop, or the caller in
+        synchronous use).  A second concurrent ``step`` is a wiring
+        bug, not a race to arbitrate — it raises immediately.  Intake
+        state shared with ``submit`` (queue, completed list, metrics)
+        is touched under the scheduler lock; the device dispatch
+        itself runs OUTSIDE it, so submitters and push workers overlap
+        with device time instead of serializing behind it."""
+        if not self._step_lock.acquire(blocking=False):
+            raise RuntimeError(
+                "SlotScheduler.step() called concurrently — the slot "
+                "pool has exactly one stepping thread (see DESIGN.md "
+                "§13); route concurrent traffic through repro.gateway")
+        try:
+            return self._step_impl()
+        finally:
+            self._step_lock.release()
+
+    def _step_impl(self) -> int:
+        with self._lock:
+            before = len(self.completed)
+            self._step_idx += 1
+            self._admit_from_queue()
+            if not self._active.any():
+                return len(self.completed) - before
+            if self._injector is not None:
+                self._inject_poisons()
+            budget = np.minimum(self._max_iters - self._iters,
+                                np.iinfo(np.int32).max).astype(np.int32)
         t0 = time.perf_counter()
         try:
             if self._injector is not None:
@@ -712,59 +797,63 @@ class SlotScheduler:
                 self._put_small(self._tol),
                 self._put_small(np.maximum(budget, 0)), self._inv_deg)
         except Exception as exc:      # noqa: BLE001 — resilience layer
-            self._recover_step_failure(exc)
-            return len(self.completed) - before
+            with self._lock:
+                self._recover_step_failure(exc)
+                return len(self.completed) - before
         self._step_retries = 0
         ran = self._active.copy()
         active = np.asarray(active)
         took = np.asarray(took)
         res = np.asarray(res)
-        self._iters += took
-        self._update_pressure(time.perf_counter() - t0, int(took.max()))
-        requeue: list[int] = []
-        for slot in range(self.slots):
-            q = self._slot_query[slot]
-            if q is None or not ran[slot]:
-                continue              # empty / idle before the call
-            if not np.isfinite(res[slot]):
-                # poisoned column: the finiteness-aware freeze rule
-                # stopped it on device; neighbours kept iterating
-                self.metrics.incr("quarantined")
-                if q.retries < self.resilience.max_retries:
-                    q.retries += 1
-                    requeue.append(slot)
-                else:
+        with self._lock:
+            self._iters += took
+            self._update_pressure(time.perf_counter() - t0,
+                                  int(took.max()))
+            requeue: list[int] = []
+            for slot in range(self.slots):
+                q = self._slot_query[slot]
+                if q is None or not ran[slot]:
+                    continue          # empty / idle before the call
+                if not np.isfinite(res[slot]):
+                    # poisoned column: the finiteness-aware freeze rule
+                    # stopped it on device; neighbours kept iterating
+                    self.metrics.incr("quarantined")
+                    if q.retries < self.resilience.max_retries:
+                        q.retries += 1
+                        requeue.append(slot)
+                    else:
+                        self._fail_slot(
+                            slot, q,
+                            error=f"quarantined: non-finite residual "
+                                  f"after {int(self._iters[slot])} "
+                                  f"iterations")
+                    continue
+                if res[slot] >= 0.0:
+                    self._slot_res[slot] = float(res[slot])
+                if active[slot]:
+                    continue
+                self._finish(slot, q, residual=(
+                    float(self._slot_res[slot])
+                    if self._slot_res[slot] >= 0.0 else None))
+            self._active = active & np.array(
+                [q is not None for q in self._slot_query])
+            for slot in requeue:
+                # clean-seed re-admission overwrites the poisoned
+                # column; the iterations the poisoned run burned stay
+                # charged against the query's budget (and reported),
+                # so retries can never exceed max_iters total work
+                q = self._slot_query[slot]
+                q.iters_done = int(self._iters[slot])
+                if q.iters_done >= q.max_iters:
                     self._fail_slot(
                         slot, q,
-                        error=f"quarantined: non-finite residual after "
-                              f"{int(self._iters[slot])} iterations")
-                continue
-            if res[slot] >= 0.0:
-                self._slot_res[slot] = float(res[slot])
-            if active[slot]:
-                continue
-            self._finish(slot, q, residual=(
-                float(self._slot_res[slot])
-                if self._slot_res[slot] >= 0.0 else None))
-        self._active = active & np.array(
-            [q is not None for q in self._slot_query])
-        for slot in requeue:
-            # clean-seed re-admission overwrites the poisoned column;
-            # the iterations the poisoned run burned stay charged
-            # against the query's budget (and reported), so retries
-            # can never exceed max_iters total work
-            q = self._slot_query[slot]
-            q.iters_done = int(self._iters[slot])
-            if q.iters_done >= q.max_iters:
-                self._fail_slot(
-                    slot, q,
-                    error=f"quarantined: iteration budget exhausted "
-                          f"after {q.retries} retries")
-                continue
-            self.metrics.incr("requeued")
-            self._admit(slot, q)
-        self._sweep_deadlines()
-        return len(self.completed) - before
+                        error=f"quarantined: iteration budget "
+                              f"exhausted after {q.retries} retries")
+                    continue
+                self.metrics.incr("requeued")
+                self._admit(slot, q)
+            self._sweep_deadlines()
+            return len(self.completed) - before
 
     def _inject_poisons(self) -> None:
         """Test-only chaos hook: overwrite scheduled slot columns with
@@ -911,18 +1000,43 @@ class GraphRegistry:
     ``GraphPlan`` — and ``load(plan_path=...)`` seeds that cache from
     a persisted plan so even the first build is a warm ``.npz`` read
     instead of an edge sort.
+
+    Multi-graph QoS (DESIGN.md §13): each graph carries a weighted-
+    fair admission ``share`` (``run_until_drained`` and the gateway's
+    device loop interleave stepper chunks in share proportion — one
+    hot graph cannot starve the others), and an optional
+    ``memory_budget_bytes`` bounds the summed plan footprint
+    (``core.plan.plan_nbytes``): adding a graph past the budget
+    evicts least-recently-used IDLE graphs — never one with queued or
+    in-flight queries — releasing their plan-cache chains
+    (``evict_plans(chain=True)``, the PR 5 LRU hook).
     """
 
-    def __init__(self, **defaults):
+    def __init__(self, *, memory_budget_bytes: int | None = None,
+                 **defaults):
         self._defaults = defaults
+        self.memory_budget_bytes = memory_budget_bytes
         self._schedulers: dict[str, SlotScheduler] = {}
+        self._shares: dict[str, float] = {}
+        self._plan_bytes: dict[str, int] = {}
+        self._last_used: dict[str, int] = {}
+        self._use_clock = itertools.count()   # monotone LRU timestamps
+        self.evictions = 0
 
-    def add(self, name: str, g: Graph, **overrides) -> SlotScheduler:
+    def add(self, name: str, g: Graph, *, share: float = 1.0,
+            **overrides) -> SlotScheduler:
         if name in self._schedulers:
             raise ValueError(f"graph {name!r} already registered")
+        if not share > 0:
+            raise ValueError(f"share must be > 0; got {share}")
         kw = {**self._defaults, **overrides}
-        self._schedulers[name] = SlotScheduler(g, **kw)
-        return self._schedulers[name]
+        sch = SlotScheduler(g, **kw)
+        self._schedulers[name] = sch
+        self._shares[name] = float(share)
+        self._plan_bytes[name] = plan_nbytes(sch.engine.plan)
+        self._touch(name)
+        self._enforce_budget(protect=name)
+        return sch
 
     def load(self, name: str, path: str, *,
              plan_path: str | None = None, **overrides) -> SlotScheduler:
@@ -946,11 +1060,81 @@ class GraphRegistry:
 
     def submit(self, name: str, seeds: np.ndarray | None = None,
                **kw) -> int:
-        return self.get(name).submit(seeds, **kw)
+        sch = self.get(name)
+        self._touch(name)
+        return sch.submit(seeds, **kw)
 
-    def run_until_drained(self) -> dict[str, list[QueryResult]]:
-        return {name: sch.run_until_drained()
-                for name, sch in self._schedulers.items()}
+    # -------------------------------------------------- memory budget
+    @property
+    def total_plan_bytes(self) -> int:
+        return sum(self._plan_bytes.values())
+
+    def _touch(self, name: str) -> None:
+        self._last_used[name] = next(self._use_clock)
+
+    def _busy(self, name: str) -> bool:
+        sch = self._schedulers[name]
+        return sch.queued > 0 or sch.active_slots > 0
+
+    def evict(self, name: str) -> None:
+        """Retire one graph: drop its scheduler and release its plan-
+        cache chain.  Refuses while the graph has queued or in-flight
+        queries — eviction is for idle residents, not live traffic."""
+        sch = self.get(name)
+        if self._busy(name):
+            raise ValueError(
+                f"cannot evict {name!r}: {sch.queued} queued, "
+                f"{sch.active_slots} in flight — drain it first")
+        from ..core.plan import evict_plans
+        g = sch.g
+        for d in (self._schedulers, self._shares, self._plan_bytes,
+                  self._last_used):
+            d.pop(name, None)
+        evict_plans(g, chain=True)
+        self.evictions += 1
+
+    def _enforce_budget(self, *, protect: str | None = None) -> None:
+        """Evict least-recently-used IDLE graphs until the summed plan
+        footprint fits the budget.  A busy victim is skipped — when
+        every candidate is busy, enforcement DEFERS (stays over
+        budget) rather than dropping live queries; the next add or
+        idle moment retries."""
+        if self.memory_budget_bytes is None:
+            return
+        while self.total_plan_bytes > self.memory_budget_bytes:
+            victims = [n for n in self._schedulers
+                       if n != protect and not self._busy(n)]
+            if not victims:
+                return                # all busy — defer, stay over
+            self.evict(min(victims, key=lambda n: self._last_used[n]))
+
+    # ------------------------------------------------ weighted drain
+    def run_until_drained(self, *, max_chunks: int = 100_000
+                          ) -> dict[str, list[QueryResult]]:
+        """Serve every registered graph to empty, interleaving stepper
+        chunks weighted-fair by share (stride scheduling) instead of
+        draining graphs serially — matching what the gateway's device
+        loop does under live traffic."""
+        from ..gateway.qos import WeightedFair
+        start = {n: len(s.completed)
+                 for n, s in self._schedulers.items()}
+        fair = WeightedFair(self._shares)
+        for _ in range(max_chunks):
+            busy = [n for n in self._schedulers if self._busy(n)]
+            if not busy:
+                break
+            self._schedulers[fair.pick(busy)].step()
+        else:
+            raise RuntimeError(f"not drained after {max_chunks} chunks")
+        return {n: s.completed[start[n]:]
+                for n, s in self._schedulers.items()}
+
+    def gateway(self, config=None):
+        """Async front door over every registered graph — one device
+        thread interleaving schedulers by share (repro.gateway)."""
+        from ..gateway import Gateway
+        return Gateway(dict(self._schedulers),
+                       shares=dict(self._shares), config=config)
 
     def names(self) -> list[str]:
         return sorted(self._schedulers)

@@ -49,7 +49,7 @@ import numpy as np
 
 from ..core.pagerank import (PageRankResult, _inv_degree,
                              fused_power_iteration)
-from ..core.plan import validate_plan
+from ..core.plan import internal_graph, reorder_inverse, validate_plan
 from ..core.push import (MAX_PUSH_BUF, PUSH_PAD,  # noqa: F401 re-export
                          _bucket, _pad_to, _pcpm_push,
                          _pcpm_push_streams, _push_while,
@@ -147,12 +147,28 @@ def update_ranks(plan, delta: GraphDelta, prev_pr, *,
     r0 = seed_residual(g_old, g_new, delta, prev_host,
                        damping=damping, dangling=dangling)
     r1 = float(np.abs(r0, dtype=np.float64).sum())
+    # locality-reordered plans (core/plan.py): the plan's streams index
+    # the RELABELED graph, so the push/fused loops iterate in internal
+    # space.  The graphs and the residual seed stay original — only the
+    # VECTORS permute in, and the ranks gather back once at the end.
+    perm = plan.reorder_perm
+    if perm is not None:
+        inv = reorder_inverse(plan)
+        prev_host, r0 = prev_host[inv], r0[inv]
+        g_iter = internal_graph(g_new, plan)
+    else:
+        g_iter = g_new
+
+    def _out(ranks):
+        return (jnp.take(ranks, jnp.asarray(perm))
+                if perm is not None else ranks)
+
     prev = jnp.asarray(prev_host)
     if r1 < tol:
         # already inside the stopping rule; still fold the first-order
         # correction in (free accuracy, one vector add)
         ranks = prev + jnp.asarray(r0) if r1 > 0.0 else prev
-        return PageRankResult(ranks, 0, [r1])
+        return PageRankResult(_out(ranks), 0, [r1])
 
     if r1 > dense_threshold:
         # delta too heavy for the geometric-push argument — run the §4
@@ -163,14 +179,14 @@ def update_ranks(plan, delta: GraphDelta, prev_pr, *,
                                     check_every=1, dangling=dangling)
         n = g_new.num_nodes
         base = jnp.full((n,), (1.0 - damping) / n, dtype=jnp.float32)
-        pr, it, res = run(prev, _inv_degree(g_new), base)
+        pr, it, res = run(prev, _inv_degree(g_iter), base)
         res_host = np.asarray(res)[:int(it)]
-        return PageRankResult(pr, int(it),
+        return PageRankResult(_out(pr), int(it),
                               [float(x) for x in res_host if x >= 0.0])
 
     run = residual_push_loop(plan, damping=damping, dangling=dangling)
     pr, r_dev = prev, jnp.asarray(r0)
-    inv_deg = _inv_degree(g_new)
+    inv_deg = _inv_degree(g_iter)
     sweeps, remaining, res_list = 0, max_push, []
     while True:
         # the device loop holds a MAX_PUSH_BUF residual ring; larger
@@ -188,4 +204,4 @@ def update_ranks(plan, delta: GraphDelta, prev_pr, *,
             break
     # append the post-push norm so residuals[-1] reads like the cold
     # driver's: < tol iff converged (not merely budget-exhausted)
-    return PageRankResult(pr, sweeps, res_list + [final])
+    return PageRankResult(_out(pr), sweeps, res_list + [final])

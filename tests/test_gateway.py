@@ -1,0 +1,413 @@
+"""Gateway subsystem suite (DESIGN.md §13): async front door
+semantics under concurrency, warm-result cache correctness and
+invalidation, slot-pool autotune, and multi-graph QoS (weighted-fair
+interleave + budgeted plan eviction).
+"""
+import collections
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.gateway import (Gateway, GatewayConfig, WeightedFair,
+                           autotune_slots)
+from repro.gateway.cache import ResultCache, seed_digest
+from repro.graphs import generators
+from repro.reliability import ResilienceConfig
+from repro.serve import GraphRegistry, SlotScheduler
+from repro.stream import GraphDelta
+
+SMALL = dict(method="pcpm", part_size=64, chunk=4)
+NO_TUNE = GatewayConfig()
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generators.rmat(8, 8, seed=1)
+
+
+def _seed(g, at=3):
+    s = np.zeros(g.num_nodes, np.float32)
+    s[at] = 1.0
+    s[(at * 7 + 1) % g.num_nodes] = 1.0
+    return s
+
+
+def _delta(g, rng_seed=0, k=24):
+    rng = np.random.default_rng(rng_seed)
+    src = rng.integers(0, g.num_nodes, k).astype(np.int64)
+    dst = rng.integers(0, g.num_nodes, k).astype(np.int64)
+    return GraphDelta.insert(np.stack([src, dst], axis=1))
+
+
+def _audit_futures(sch, results):
+    """Exactly-once: every future resolved to a distinct uid whose
+    trace is terminal and consistent with the result."""
+    counts = collections.Counter(r.uid for r in results)
+    assert all(c == 1 for c in counts.values())
+    for r in results:
+        tr = sch.metrics.traces[r.uid]
+        assert tr.t_done is not None
+        assert tr.converged == r.converged
+        assert tr.error == r.error
+
+
+class TestFrontDoor:
+    def test_mixed_traffic_resolves(self, g):
+        sch = SlotScheduler(g, slots=4, **SMALL)
+        with Gateway(sch) as gw:
+            futs = [gw.submit(_seed(g, at=i), top_k=8, tol=1e-2,
+                              max_iters=300) for i in range(3)]
+            futs += [gw.submit(None, tol=1e-6, max_iters=200)
+                     for _ in range(3)]
+            res = [f.result(timeout=120) for f in futs]
+        assert all(r.error is None and r.converged for r in res)
+        assert sch.metrics.counters["push_served"] == 3
+        assert sch.trace_count == 1
+        assert sch.admit_trace_count == 1
+        _audit_futures(sch, res)
+
+    def test_submit_validates_synchronously(self, g):
+        sch = SlotScheduler(g, slots=1, **SMALL)
+        with Gateway(sch) as gw:
+            with pytest.raises(ValueError, match="max_iters"):
+                gw.submit(None, max_iters=-1)
+            with pytest.raises(ValueError, match="top_k"):
+                gw.submit(None, top_k=0)
+            with pytest.raises(ValueError, match="needs a seed"):
+                gw.submit(None, route="push")
+
+    def test_backlog_rejection_is_explicit(self, g):
+        """max_pending=0: every stepper query is shed AT THE GATEWAY
+        with a terminal, counted result — push-eligible traffic keeps
+        flowing through the worker pool untouched."""
+        sch = SlotScheduler(g, slots=1, **SMALL)
+        cfg = GatewayConfig(max_pending=0, cache_entries=0)
+        with Gateway(sch, config=cfg) as gw:
+            r_step = gw.submit(None, tol=1e-6).result(timeout=60)
+            r_push = gw.submit(_seed(g), top_k=8,
+                               tol=1e-2).result(timeout=60)
+        assert "gateway backlog full" in r_step.error
+        assert not r_step.converged
+        assert r_push.error is None and r_push.converged
+        assert sch.metrics.counters["rejected"] == 1
+        _audit_futures(sch, [r_step, r_push])
+
+    def test_scheduler_queue_cap_survives_gateway(self, g):
+        """PR 6 admission semantics through the async path: a bounded
+        scheduler queue still sheds explicitly, and the shed results
+        come back through the futures."""
+        sch = SlotScheduler(
+            g, slots=1, route="stepper",
+            resilience=ResilienceConfig(max_queue=1), **SMALL)
+        with Gateway(sch, config=GatewayConfig(cache_entries=0)) as gw:
+            futs = [gw.submit(_seed(g, at=i), tol=0.0, max_iters=200)
+                    for i in range(8)]
+            res = [f.result(timeout=120) for f in futs]
+        rejected = [r for r in res if r.error
+                    and "admission queue full" in r.error]
+        served = [r for r in res if r.error is None]
+        assert len(rejected) + len(served) == 8
+        assert sch.metrics.counters["rejected"] == len(rejected) > 0
+        _audit_futures(sch, res)
+
+    def test_deadline_expiry_through_gateway(self, g):
+        """Deadlines are absolute from gateway intake: a query stuck
+        behind a long-running slot expires in the queue, explicitly."""
+        sch = SlotScheduler(g, slots=1, route="stepper", **SMALL)
+        with Gateway(sch, config=GatewayConfig(cache_entries=0)) as gw:
+            f_long = gw.submit(_seed(g, at=1), tol=0.0, max_iters=400)
+            f_exp = gw.submit(_seed(g, at=2), tol=1e-6, max_iters=400,
+                              deadline_s=1e-4)
+            r_long = f_long.result(timeout=120)
+            r_exp = f_exp.result(timeout=120)
+        assert r_long.error is None
+        assert r_exp.error is not None and "deadline" in r_exp.error
+        assert sch.metrics.counters["expired"] == 1
+
+    def test_priority_orders_backlog(self, g):
+        """The device thread hands the whole backlog to the scheduler
+        before admitting, so priorities submitted out of order still
+        win — same semantics as synchronous submission."""
+        sch = SlotScheduler(g, slots=1, route="stepper", **SMALL)
+        gw = Gateway(sch, config=GatewayConfig(cache_entries=0))
+        try:
+            # occupy the single slot so the rest queue behind it
+            f0 = gw.submit(_seed(g, at=0), tol=0.0, max_iters=200)
+            lo = gw.submit(_seed(g, at=1), tol=0.0, max_iters=20,
+                           priority=0)
+            hi = gw.submit(_seed(g, at=2), tol=0.0, max_iters=20,
+                           priority=5)
+            res = {id(f): f.result(timeout=120)
+                   for f in (f0, lo, hi)}
+            tr_hi = sch.metrics.traces[res[id(hi)].uid]
+            tr_lo = sch.metrics.traces[res[id(lo)].uid]
+            assert tr_hi.t_admit <= tr_lo.t_admit
+        finally:
+            gw.close()
+
+    def test_concurrent_submit_storm_exactly_once(self, g):
+        """N submitter threads against one gateway: every future
+        resolves exactly once, uids are unique, the stepper stays at
+        one trace, and the accounting audit holds."""
+        sch = SlotScheduler(g, slots=4, **SMALL)
+        results, lock = [], threading.Lock()
+        with Gateway(sch, config=GatewayConfig(cache_entries=0)) as gw:
+            def storm(i):
+                futs = []
+                for j in range(15):
+                    if (i + j) % 2:
+                        futs.append(gw.submit(_seed(g, at=i * 7 + j),
+                                              top_k=8, tol=1e-2,
+                                              max_iters=300))
+                    else:
+                        futs.append(gw.submit(_seed(g, at=i * 5 + j),
+                                              tol=1e-5, max_iters=300))
+                got = [f.result(timeout=120) for f in futs]
+                with lock:
+                    results.extend(got)
+
+            ts = [threading.Thread(target=storm, args=(i,))
+                  for i in range(6)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        assert len(results) == 90
+        assert len({r.uid for r in results}) == 90
+        assert all(r.error is None for r in results)
+        assert sch.trace_count == 1
+        assert sch.admit_trace_count == 1
+        _audit_futures(sch, results)
+
+    def test_close_drains_and_rejects_after(self, g):
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        gw = Gateway(sch)
+        futs = [gw.submit(None, tol=1e-6, max_iters=200)
+                for _ in range(4)]
+        gw.close()                      # default drain=True
+        assert all(f.done() for f in futs)
+        with pytest.raises(RuntimeError, match="closed"):
+            gw.submit(None)
+
+
+class TestResultCache:
+    def test_hit_is_bit_identical_and_o_k(self, g):
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        with Gateway(sch) as gw:
+            r1 = gw.submit(_seed(g), top_k=8,
+                           tol=1e-2).result(timeout=120)
+            r2 = gw.submit(_seed(g), top_k=8,
+                           tol=1e-2).result(timeout=120)
+        assert not r1.cached and r2.cached
+        assert r2.uid != r1.uid                   # fresh uid + trace
+        assert r2.top_ids is r1.top_ids           # THE same arrays
+        assert r2.top_scores is r1.top_scores
+        assert sch.metrics.counters["cache_hits"] == 1
+        assert sch.metrics.traces[r2.uid].t_done is not None
+        assert gw.cache.hits == 1
+
+    def test_stepper_results_cache_too(self, g):
+        sch = SlotScheduler(g, slots=2, route="stepper", **SMALL)
+        with Gateway(sch) as gw:
+            r1 = gw.submit(_seed(g), tol=1e-6).result(timeout=120)
+            r2 = gw.submit(_seed(g), tol=1e-6).result(timeout=120)
+        assert r2.cached and r2.ranks is r1.ranks
+
+    def test_unconverged_and_errored_not_cached(self, g):
+        sch = SlotScheduler(g, slots=1, route="stepper", **SMALL)
+        with Gateway(sch) as gw:
+            # tol=0 runs the budget and never converges -> uncached
+            r1 = gw.submit(_seed(g), tol=0.0,
+                           max_iters=8).result(timeout=120)
+            r2 = gw.submit(_seed(g), tol=0.0,
+                           max_iters=8).result(timeout=120)
+        assert not r1.converged and not r2.cached
+        assert gw.cache.hits == 0 and len(gw.cache) == 0
+
+    def test_distinct_requests_miss(self, g):
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        with Gateway(sch) as gw:
+            gw.submit(_seed(g, at=3), top_k=8,
+                      tol=1e-2).result(timeout=120)
+            r = gw.submit(_seed(g, at=4), top_k=8,
+                          tol=1e-2).result(timeout=120)
+            r_tol = gw.submit(_seed(g, at=3), top_k=8,
+                              tol=1e-3).result(timeout=120)
+        assert not r.cached and not r_tol.cached
+
+    def test_delta_invalidates_atomically(self, g):
+        """apply_delta through the gateway: entries keyed on the
+        outgoing plan fingerprint drop, the same request re-solves on
+        the new graph, and the push path answers against the NEW CSR
+        (regression for the stale internal-graph rebind bug)."""
+        sch = SlotScheduler(g, slots=2, **SMALL)
+        d = _delta(g)
+        with Gateway(sch) as gw:
+            r1 = gw.submit(_seed(g), top_k=8,
+                           tol=1e-3).result(timeout=120)
+            dropped = gw.apply_delta(d).result(timeout=120)
+            assert dropped >= 1
+            r2 = gw.submit(_seed(g), top_k=8,
+                           tol=1e-3).result(timeout=120)
+        assert not r2.cached                      # recomputed
+        assert sch.rebind_count == 1
+        assert sch.trace_count == 2               # one rebind compile
+        # parity: a fresh scheduler on the post-delta graph must agree
+        from repro.stream.delta import apply_delta as apply_edges
+        g_new = apply_edges(g, d)
+        ref = SlotScheduler(g_new, slots=2, **SMALL)
+        u = ref.submit(_seed(g), top_k=8, tol=1e-3)
+        ref.run_until_drained()
+        r_ref = {r.uid: r for r in ref.completed}[u]
+        assert list(r2.top_ids) == list(r_ref.top_ids)
+        np.testing.assert_allclose(r2.top_scores, r_ref.top_scores,
+                                   atol=1e-5)
+        assert gw.cache.invalidated >= 1
+
+    def test_cache_unit_lru_and_fp_invalidation(self):
+        c = ResultCache(capacity=2)
+        c.put(("g", "fp1", "s1", 1e-3, 8, 100, "auto"), "a")
+        c.put(("g", "fp1", "s2", 1e-3, 8, 100, "auto"), "b")
+        assert c.get(("g", "fp1", "s1", 1e-3, 8, 100, "auto")) == "a"
+        c.put(("g", "fp2", "s3", 1e-3, 8, 100, "auto"), "c")  # evicts s2
+        assert c.get(("g", "fp1", "s2", 1e-3, 8, 100, "auto")) is None
+        assert c.invalidate_fp("fp1") == 1
+        assert c.get(("g", "fp1", "s1", 1e-3, 8, 100, "auto")) is None
+        assert c.get(("g", "fp2", "s3", 1e-3, 8, 100, "auto")) == "c"
+
+    def test_seed_digest_stability(self, g):
+        s = _seed(g)
+        assert seed_digest(s) == seed_digest(s.copy())
+        assert seed_digest(s) != seed_digest(_seed(g, at=4))
+        assert seed_digest(None) == "uniform"
+
+
+class TestAutotune:
+    def test_report_sane(self, g):
+        eng = repro.open(g, repro.EngineConfig(**{
+            k: v for k, v in SMALL.items() if k != "chunk"})).engine
+        rep = autotune_slots(eng, chunk=4, target_chunk_s=10.0,
+                             candidates=(2, 4, 8), repeats=2)
+        assert rep.chosen == 8            # everything under 10 s
+        assert set(rep.probes) == {2, 4, 8}
+        assert all(t > 0 for t in rep.probes.values())
+        tight = autotune_slots(eng, chunk=4, target_chunk_s=1e-12,
+                               candidates=(2, 4, 8), repeats=1)
+        assert tight.chosen == 2          # nothing passes -> smallest
+        assert len(tight.probes) == 1     # early stop after first miss
+
+    def test_non_multivector_backend_defaults(self):
+        class FakeBackend:
+            multi_vector = False
+
+        class FakeEngine:
+            backend = FakeBackend()
+
+        rep = autotune_slots(FakeEngine(), chunk=4, default=6)
+        assert rep.chosen == 6 and rep.probes == {}
+
+    def test_session_gateway_wires_chosen_slots(self, g):
+        sess = repro.open(g, repro.EngineConfig(**SMALL, slots=2))
+        cfg = GatewayConfig(target_chunk_s=10.0,
+                            autotune_candidates=(2, 4, 8))
+        with sess.gateway(config=cfg) as gw:
+            assert gw.autotune_report is not None
+            assert gw.autotune_report.chosen == 8
+            sch = gw._schedulers["default"]
+            assert sch.slots == 8
+            r = gw.submit(None, tol=1e-6).result(timeout=120)
+        assert r.converged
+        # explicit slots override beats autotune
+        with sess.gateway(config=cfg, slots=3) as gw2:
+            assert gw2.autotune_report is None
+            assert gw2._schedulers["default"].slots == 3
+
+
+class TestWeightedFair:
+    def test_share_proportions(self):
+        fair = WeightedFair({"a": 3.0, "b": 1.0})
+        picks = collections.Counter(fair.pick(["a", "b"])
+                                    for _ in range(400))
+        assert picks["a"] == 300 and picks["b"] == 100
+
+    def test_rejoin_without_banked_credit(self):
+        fair = WeightedFair({"a": 1.0, "b": 1.0})
+        for _ in range(50):
+            fair.pick(["a"])              # b idle throughout
+        picks = collections.Counter(fair.pick(["a", "b"])
+                                    for _ in range(40))
+        # b rejoins at a's pass, not 50 turns in arrears
+        assert picks["b"] <= 21
+
+    def test_rejects_nonpositive_share(self):
+        with pytest.raises(ValueError, match="share"):
+            WeightedFair({"a": 0.0})
+
+
+class TestRegistryQoS:
+    def test_weighted_drain_and_gateway(self, g):
+        g2 = generators.rmat(8, 8, seed=2)
+        reg = GraphRegistry(**SMALL, slots=2)
+        reg.add("one", g, share=2.0)
+        reg.add("two", g2, share=1.0)
+        reg.submit("one", _seed(g), tol=1e-5, max_iters=200)
+        reg.submit("two", _seed(g2), tol=1e-5, max_iters=200)
+        out = reg.run_until_drained()
+        assert len(out["one"]) == 1 and len(out["two"]) == 1
+        assert all(r.converged for rs in out.values() for r in rs)
+        with reg.gateway() as gw:
+            r1 = gw.submit(_seed(g), graph="one",
+                           tol=1e-5).result(timeout=120)
+            r2 = gw.submit(_seed(g2), graph="two",
+                           tol=1e-5).result(timeout=120)
+            with pytest.raises(ValueError, match="graph="):
+                gw.submit(None)           # ambiguous without a name
+        assert r1.converged and r2.converged
+
+    def test_budget_evicts_lru_idle_never_busy(self, g):
+        from repro.core.plan import plan_nbytes
+        g2 = generators.rmat(8, 8, seed=2)
+        g3 = generators.rmat(8, 8, seed=3)
+        probe = GraphRegistry(**SMALL, slots=1)
+        per = plan_nbytes(probe.add("probe", g).engine.plan)
+        reg = GraphRegistry(memory_budget_bytes=int(2.5 * per),
+                            **SMALL, slots=1)
+        reg.add("a", g)
+        reg.add("b", g2)
+        # occupy 'a' with an in-flight query (admitted, not drained)
+        reg.submit("a", _seed(g), tol=0.0, max_iters=400)
+        reg.get("a").step()
+        assert reg.get("a").active_slots == 1
+        reg.add("c", g3)                  # over budget -> evict ONE
+        assert reg.evictions == 1
+        assert "b" not in reg             # LRU idle victim
+        assert "a" in reg and "c" in reg  # busy + newest survive
+        out = reg.run_until_drained()     # in-flight query unharmed
+        assert len(out["a"]) == 1 and out["a"][0].error is None
+
+    def test_budget_defers_when_all_busy(self, g):
+        from repro.core.plan import plan_nbytes
+        g2 = generators.rmat(8, 8, seed=2)
+        probe = GraphRegistry(**SMALL, slots=1)
+        per = plan_nbytes(probe.add("probe", g).engine.plan)
+        reg = GraphRegistry(memory_budget_bytes=int(1.5 * per),
+                            **SMALL, slots=1)
+        reg.add("a", g)
+        reg.submit("a", _seed(g), tol=0.0, max_iters=400)
+        reg.get("a").step()
+        reg.add("b", g2)                  # over budget, 'a' is busy
+        assert "a" in reg and "b" in reg  # deferred, not dropped
+        assert reg.total_plan_bytes > reg.memory_budget_bytes
+        assert reg.evictions == 0
+
+    def test_explicit_evict_refuses_busy(self, g):
+        reg = GraphRegistry(**SMALL, slots=1)
+        reg.add("a", g)
+        reg.submit("a", _seed(g), tol=0.0, max_iters=400)
+        with pytest.raises(ValueError, match="drain"):
+            reg.evict("a")
+        reg.run_until_drained()
+        reg.evict("a")
+        assert "a" not in reg and reg.evictions == 1

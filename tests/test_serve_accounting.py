@@ -24,6 +24,8 @@ and asserts each uid resolves exactly once with a trace consistent
 with its result.
 """
 import collections
+import sys
+import threading
 
 import numpy as np
 import pytest
@@ -240,6 +242,122 @@ class TestTerminalAudit:
         assert all(r.converged for r in served)
         assert sch.trace_count == 1
         assert sch.admit_trace_count == 1
+
+    def test_concurrent_submit_storm_accounting(self, g):
+        """Satellite regression for the thread-safety bug: N threads
+        hammering ``submit`` must lose NO counter increments and drop
+        NO terminal results.  Forced through the rejection path
+        (max_queue=0, route='stepper') so every submit does the full
+        metrics round trip with zero device work — pre-fix the
+        ``Counter[name] += 1`` read-modify-write silently lost updates
+        under preemption and ``counters['rejected']`` undercounted."""
+        sch = SlotScheduler(g, slots=1,
+                            resilience=ResilienceConfig(max_queue=0),
+                            **SMALL)
+        threads, per, uids = 8, 300, []
+        lock = threading.Lock()
+        reader_errors = []
+        stop = threading.Event()
+
+        def storm():
+            mine = [sch.submit(None, tol=1e-6, max_iters=10,
+                               route="stepper")
+                    for _ in range(per)]
+            with lock:
+                uids.extend(mine)
+
+        def reader():
+            # pre-fix: percentile/summary iterated the LIVE traces
+            # dict and died with 'dictionary changed size during
+            # iteration' under any concurrent submit
+            try:
+                while not stop.is_set():
+                    sch.metrics.percentile(50)
+                    sch.metrics.summary()
+            except RuntimeError as exc:
+                reader_errors.append(exc)
+
+        old = sys.getswitchinterval()
+        sys.setswitchinterval(1e-6)    # maximize preemption pressure
+        try:
+            rd = threading.Thread(target=reader)
+            rd.start()
+            ts = [threading.Thread(target=storm) for _ in range(threads)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            stop.set()
+            rd.join()
+        finally:
+            sys.setswitchinterval(old)
+        assert not reader_errors
+        total = threads * per
+        assert len(set(uids)) == total           # no uid reuse
+        assert sch.metrics.counters["rejected"] == total
+        assert len(sch.completed) == total
+        self._audit(sch, uids)
+
+    def test_concurrent_mixed_storm_with_device_thread(self, g):
+        """Mixed push/stepper storm: submitter threads race a single
+        stepping thread (the gateway's thread-ownership shape).  Every
+        uid must resolve exactly once with a consistent trace, push
+        answers must come off per-thread engines, and the stepper must
+        stay at one trace."""
+        sch = SlotScheduler(g, slots=4, **SMALL)
+        uids, lock, done = [], threading.Lock(), threading.Event()
+
+        def submitter(i):
+            mine = []
+            for j in range(20):
+                if (i + j) % 2:
+                    mine.append(sch.submit(_seed(g, at=i * 7 + j),
+                                           top_k=8, tol=1e-2,
+                                           max_iters=300))
+                else:
+                    mine.append(sch.submit(_seed(g, at=i * 5 + j),
+                                           tol=1e-5, max_iters=300))
+            with lock:
+                uids.extend(mine)
+
+        ts = [threading.Thread(target=submitter, args=(i,))
+              for i in range(6)]
+        errors = []
+
+        def device_loop():
+            try:
+                while not done.is_set() or sch.queued \
+                        or sch.active_slots:
+                    sch.step()
+            except Exception as exc:   # noqa: BLE001
+                errors.append(exc)
+
+        dev = threading.Thread(target=device_loop)
+        dev.start()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        done.set()
+        dev.join(timeout=120)
+        assert not dev.is_alive() and not errors
+        assert len(uids) == 120
+        by_uid = self._audit(sch, uids)
+        assert all(r.error is None for r in by_uid.values())
+        assert sch.metrics.counters["push_served"] > 0
+        assert sch.trace_count == 1
+        assert sch.admit_trace_count == 1
+
+    def test_second_stepper_thread_raises(self, g):
+        """``step()`` is single-caller by contract: a second thread
+        stepping concurrently must fail fast, not corrupt the pool."""
+        sch = SlotScheduler(g, slots=1, **SMALL)
+        sch._step_lock.acquire()       # impersonate a stepping thread
+        try:
+            with pytest.raises(RuntimeError, match="concurrently"):
+                sch.step()
+        finally:
+            sch._step_lock.release()
 
     def test_expiry_and_deadline_paths_audit(self, g):
         """Queue expiry and in-flight deadline degradation both leave

@@ -465,3 +465,55 @@ def test_scheduler_apply_delta_keeps_inflight_queries():
     sch.submit(tol=1e-6, max_iters=200)
     sch.run_until_drained()
     assert sch.trace_count == 2 and sch.admit_trace_count == 1
+
+
+# ---------------------------------------------------------------------------
+# Warm starts on locality-reordered plans
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("reorder", ["degree", "hybrid"])
+def test_session_reorder_warm_composes(reorder):
+    """``warm=True`` on a ``reorder != none`` session composes the
+    stored original-space ranks through ``reorder_perm`` (internal
+    space in, gather back out) instead of cold-falling-back — the
+    labeling is the ONLY difference, so parity and incrementality must
+    match the unreordered warm path exactly."""
+    rng = np.random.default_rng(43)
+    g = _graph(scale=11)
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=PART,
+                                            reorder=reorder))
+    assert sess.plan.reorder_perm is not None
+    sess.pagerank(num_iterations=400, tol=1e-6)
+    # pure re-solve: the stored ranks already satisfy tol, so the warm
+    # path answers in ZERO sweeps (a cold fallback would power-iterate
+    # from scratch — the pre-fix behavior)
+    again = sess.pagerank(warm=True, tol=1e-6, num_iterations=400)
+    assert again.iterations == 0
+    d1 = _random_delta(g, rng, dst_parts=np.array([2, 9]))
+    d2 = _random_delta(apply_delta(g, d1), rng,
+                       dst_parts=np.array([5]))
+    sess.apply_delta(d1)
+    sess.apply_delta(d2)
+    warm = sess.pagerank(warm=True, tol=1e-6, num_iterations=400)
+    cold = pagerank(sess.graph, engine=sess.engine,
+                    num_iterations=400, tol=1e-10)
+    err = np.abs(np.asarray(warm.ranks) - np.asarray(cold.ranks)).max()
+    assert err <= 1e-6, err
+    assert 0 < warm.iterations < 400   # a push, not a cold re-run
+
+
+def test_session_reorder_warm_unconverged_still_falls_back():
+    """The honest fallback survives the reorder composition: an
+    unconverged prior on a reordered plan still cold-runs."""
+    rng = np.random.default_rng(47)
+    g = _graph(scale=11)
+    sess = repro.open(g, repro.EngineConfig(method="pcpm",
+                                            part_size=PART,
+                                            reorder="hybrid"))
+    sess.pagerank(num_iterations=20, tol=0.0)     # NOT converged
+    sess.apply_delta(_random_delta(g, rng, dst_parts=np.array([1])))
+    warm = sess.pagerank(warm=True, tol=1e-8, num_iterations=400)
+    cold = pagerank(sess.graph, engine=sess.engine,
+                    num_iterations=400, tol=1e-10)
+    err = np.abs(np.asarray(warm.ranks) - np.asarray(cold.ranks)).max()
+    assert err <= 1e-6, err
