@@ -25,7 +25,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of: table4 fig8 table5 table6 fig12 "
                          "table7 dist e2e sharded serve serve_push "
-                         "serve_gateway stream locality")
+                         "serve_gateway stream locality comm")
     ap.add_argument("--reorder", default=None,
                     choices=["none", "degree", "bfs", "hybrid"],
                     help="add the plan-layer locality job, measuring "
@@ -65,7 +65,8 @@ def main(argv=None) -> int:
                    table6_comm_locality, fig12_partition_sweep,
                    table7_preproc, dist_wire, pagerank_e2e,
                    sharded_loop, serve_load, serve_push,
-                   serve_gateway, stream_updates, locality)
+                   serve_gateway, stream_updates, locality,
+                   comm_live)
     jobs = {
         "table4": lambda: table4_runtime.run(
             datasets, part_size=args.part_size),
@@ -98,6 +99,9 @@ def main(argv=None) -> int:
             datasets[:2], part_size=args.part_size,
             orderings=(["none", args.reorder] if args.reorder
                        else None)),
+        # measured-vs-model comm accounting (DESIGN.md §14)
+        "comm": lambda: comm_live.run(datasets[:2],
+                                      part_size=args.part_size),
     }
     selected = args.only or [j for j in jobs
                              if j not in ("sharded", "serve",
@@ -186,6 +190,31 @@ def main(argv=None) -> int:
         loc = locality.summarize(out.rows)
         if loc:
             doc["locality"] = loc
+        comm = comm_live.summarize(out.rows)
+        if comm:
+            doc["comm"] = comm
+        # merge, don't clobber: row FAMILIES (first path component)
+        # this run did not regenerate are carried over from the
+        # existing baseline, as are their summary sections — so
+        # ``--only comm --json BENCH_pagerank.json`` refreshes the
+        # comm/ rows without erasing e2e/table4/stream history
+        prev = None
+        try:
+            with open(args.json) as f:
+                prev = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            prev = None
+        if prev and prev.get("rows"):
+            new_fams = {r["name"].split("/")[0] for r in doc["rows"]}
+            kept = [r for r in prev["rows"]
+                    if r["name"].split("/")[0] not in new_fams]
+            doc["rows"] = kept + doc["rows"]
+            doc["only"] = sorted(set(prev.get("only", []))
+                                 | set(selected))
+            for sect in ("plan_vs_iterate", "patch_vs_rebuild",
+                         "locality", "locality_meta", "comm"):
+                if sect not in doc and sect in prev:
+                    doc[sect] = prev[sect]
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {args.json}", flush=True)

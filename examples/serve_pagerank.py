@@ -39,8 +39,18 @@ same serving pool under injected faults — a NaN poisons a slot column
 mid-flight (quarantined + re-admitted from its clean seed), a device
 step throws (retried), the pool is snapshotted, "killed", and restored
 mid-flight — and every answer still matches the fault-free run.
+
+``--observe`` runs the observability demo instead (DESIGN.md §14):
+the gateway storm again, but with a flight recorder + metrics
+registry attached — every query leaves a well-nested span tree
+(intake → backlog → slot/push → terminal → resolve), the plan build
+and solve are traced, and the measured-vs-model communication
+accountant counts every executed device pass.  Writes the trace
+JSONL, a Prometheus metrics snapshot, and the stats JSON into
+``--out`` (artifacts a CI run uploads).
 """
 import argparse
+import json
 import os
 import tempfile
 
@@ -238,6 +248,102 @@ def gateway(args):
           "warm-result cache with delta invalidation — zero retraces")
 
 
+def observe(args):
+    """Observability demo (DESIGN.md §14): the gateway storm with the
+    flight recorder on, then dump the three artifact surfaces — trace
+    JSONL, Prometheus text, stats JSON — into ``--out``."""
+    import threading
+    import time
+
+    g = generators.rmat(args.scale, 16, seed=7)
+    part_size = max(64, g.num_nodes // 64)
+    sess = repro.open(g, repro.EngineConfig(
+        method="pcpm", part_size=part_size, chunk=4, slots=args.slots,
+        observe=True))
+    res = sess.pagerank(tol=1e-6, num_iterations=200)  # traced solve
+    rng = np.random.default_rng(0)
+    nodes = rng.choice(g.num_nodes, size=args.queries, replace=False)
+
+    def one_hot(node):
+        s = np.zeros(g.num_nodes, np.float32)
+        s[node] = 1.0
+        return s
+
+    with sess.gateway() as gw:
+        results, lock = [], threading.Lock()
+
+        def client(lo, hi):
+            futs = [gw.submit(one_hot(nodes[i]),
+                              top_k=10 if i % 2 else None,
+                              tol=1e-3 if i % 2 else 1e-5,
+                              max_iters=300)
+                    for i in range(lo, hi)]
+            got = [f.result(timeout=300) for f in futs]
+            with lock:
+                results.extend(got)
+
+        t0 = time.perf_counter()
+        q4 = args.queries // 4
+        threads = [threading.Thread(target=client,
+                                    args=(i * q4, (i + 1) * q4))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        assert all(r.error is None for r in results)
+        # a repeat is a warm-result cache hit — traced as route=cached
+        r1 = gw.submit(one_hot(nodes[1]), top_k=10,
+                       tol=1e-3, max_iters=300).result(timeout=300)
+        assert r1.cached
+        prom = gw.metrics_endpoint()
+        sch = gw._schedulers["default"]
+        assert sch.trace_count == 1 and sch.admit_trace_count == 1
+
+    # ---- verify span trees off the live ring, then dump artifacts
+    obs = sess.obs
+    recs = obs.recorder.snapshot()
+    uids = {r.uid for r in results}
+    roots = [r for r in recs if r.name == "query" and r.trace in uids]
+    terms = [r for r in recs if r.name == "terminal" and r.trace in uids]
+    assert len(roots) == len(uids), (len(roots), len(uids))
+    assert len(terms) == len(uids), "exactly one terminal per query"
+    for root in roots:
+        kids = [r for r in recs if r.parent_id == root.span_id
+                and not r.is_event]
+        assert all(root.t_start <= k.t_start and k.t_end <= root.t_end
+                   for k in kids), "span tree not well-nested"
+
+    os.makedirs(args.out, exist_ok=True)
+    trace_path = obs.dump(os.path.join(args.out, "trace.jsonl"))
+    prom_path = os.path.join(args.out, "metrics.prom")
+    with open(prom_path, "w") as f:
+        f.write(prom)
+    stats = sess.stats()
+    stats_path = os.path.join(args.out, "stats.json")
+    with open(stats_path, "w") as f:
+        json.dump(stats, f, indent=1, default=str)
+
+    comm = stats["obs"]["comm"].get("pcpm", {})
+    fr = stats["obs"]["flight_recorder"]
+    print(f"storm: {len(results)} queries in {dt * 1e3:.0f}ms "
+          f"({len(results) / dt:.0f} qps), solve {res.iterations} iters")
+    print(f"flight recorder: {fr['recorded']} recorded, "
+          f"{fr['dropped']} dropped, {fr['held']} held "
+          f"(capacity {fr['capacity']})")
+    print(f"span trees: {len(roots)} roots, {len(terms)} terminals — "
+          f"well-nested, exactly one terminal each")
+    print(f"comm accountant: {comm.get('passes', 0)} passes, "
+          f"{comm.get('dram_bytes', 0):.3g} B measured, "
+          f"ratio_vs_model={comm.get('ratio_vs_model', 0):.2f}")
+    print(f"artifacts: {trace_path} ({fr['held']} records), "
+          f"{prom_path} ({len(prom.splitlines())} lines), {stats_path}")
+    print("observability demo OK: traced solve + gateway storm, "
+          "complete span trees, measured comm within model's regime, "
+          "zero retraces")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
@@ -251,6 +357,11 @@ def main():
                          "(DESIGN.md §11)")
     ap.add_argument("--gateway", action="store_true",
                     help="run the async gateway demo (DESIGN.md §13)")
+    ap.add_argument("--observe", action="store_true",
+                    help="run the observability demo (DESIGN.md §14)")
+    ap.add_argument("--out", default="obs-artifacts",
+                    help="artifact directory for --observe (trace "
+                         "JSONL, Prometheus snapshot, stats JSON)")
     args = ap.parse_args()
     if args.chaos:
         return chaos(args)
@@ -258,6 +369,8 @@ def main():
         return push(args)
     if args.gateway:
         return gateway(args)
+    if args.observe:
+        return observe(args)
 
     kron = generators.rmat(args.scale, 16, seed=7)
     plaw = generators.power_law(1 << args.scale, 14, seed=3)

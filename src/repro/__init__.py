@@ -17,6 +17,8 @@ from .core.backends import (Backend, available_backends, get_backend,
 from .gateway import Gateway, GatewayConfig
 from .ingest import (LinkFilter, NodeIdMapping, VirtualLinks,
                      ingest_edge_list)
+from .obs import (FlightRecorder, MetricsRegistry, Observability,
+                  Tracer)
 from .core.plan import (GraphPlan, PlanConfig, build_plan,
                         clear_plan_cache, evict_plans, install_plan,
                         plan_cache_stats)
@@ -32,4 +34,5 @@ __all__ = [
     "ResilienceConfig", "check_plan_integrity",
     "DynamicGraph", "GraphDelta",
     "LinkFilter", "NodeIdMapping", "VirtualLinks", "ingest_edge_list",
+    "FlightRecorder", "MetricsRegistry", "Observability", "Tracer",
 ]

@@ -72,6 +72,11 @@ class EngineConfig:
     # run layer: serving
     slots: int = 4
     chunk: int = 8
+    # observability (DESIGN.md §14): OFF by default — when True the
+    # session owns an ``obs.Observability`` bundle (span tracer +
+    # flight recorder + metrics registry + comm accountant) and every
+    # workload it fans out reports through it
+    observe: bool = False
 
     def plan_config(self) -> PlanConfig:
         return PlanConfig(method=self.method, part_size=self.part_size,
@@ -110,6 +115,11 @@ class Session:
         # idmap.py) — threaded through to serve results and
         # ``top_ranked``; None for synthetic dense-id graphs
         self.idmap = idmap
+        # observability bundle (DESIGN.md §14) — None until
+        # ``observe()`` is called or ``cfg.observe`` asks for it
+        self._obs = None
+        if cfg.observe:
+            self.observe()
         # build_plan validates the graph at entry (crisp ValueError on
         # out-of-range ids / bad dtypes, DESIGN.md §10)
         self.plan: GraphPlan = build_plan(g, cfg.plan_config())
@@ -123,6 +133,40 @@ class Session:
         self._solved_res = np.inf
         self._delta_acc = None
 
+    # --------------------------------------------------- observability
+    def observe(self, *, capacity: int = 8192, dump_dir=None):
+        """Attach (or return) this session's ``Observability`` bundle
+        (DESIGN.md §14).  Idempotent: the first call creates the
+        bundle — span tracer over a bounded flight recorder, typed
+        metrics registry, and the measured-comm accountant — and every
+        later call returns the same one.  Handles created AFTER the
+        bundle exists (``serve()``/``gateway()``) report through it;
+        ``pagerank``/``apply_delta`` on this session do too."""
+        if self._obs is None:
+            from .obs import Observability
+            self._obs = Observability(capacity=capacity,
+                                      dump_dir=dump_dir)
+        return self._obs
+
+    @property
+    def obs(self):
+        """The session's ``Observability`` bundle, or None when
+        observation was never requested."""
+        return self._obs
+
+    def stats(self) -> dict:
+        """One dict joining every cache/observability surface the
+        session can see: process-level plan-cache counters, and — when
+        observing — the metrics registry, comm summary and flight-
+        recorder occupancy."""
+        from .core.plan import plan_cache_stats
+        out = {"plan_cache": dataclasses.asdict(plan_cache_stats()),
+               "method": self.config.method,
+               "n": self.plan.num_nodes, "m": self.plan.num_edges}
+        if self._obs is not None:
+            out["obs"] = self._obs.stats()
+        return out
+
     # ---------------------------------------------------------- deltas
     def apply_delta(self, delta) -> "Session":
         """Advance the session's graph by one edge-delta batch: the
@@ -135,10 +179,21 @@ class Session:
         ``apply_delta``/construct new ones for the updated graph."""
         from .stream.delta import apply_delta as apply_edges
         from .stream.patch import patch_plan
-        g_new = apply_edges(self.graph, delta)
-        self.plan = patch_plan(self.plan, delta, g_new)
+        sp = (self._obs.tracer.start("session_delta", trace="plan",
+                                     adds=len(delta.add_src),
+                                     removes=len(delta.rem_src))
+              if self._obs is not None else None)
+        try:
+            g_new = apply_edges(self.graph, delta)
+            self.plan = patch_plan(self.plan, delta, g_new)
+        except Exception as e:
+            if sp is not None:
+                sp.end(status="error", error=repr(e))
+            raise
         self.graph = g_new
         self.engine = SpMVEngine(g_new, plan=self.plan)
+        if sp is not None:
+            sp.end(n=g_new.num_nodes, m=int(g_new.src.shape[0]))
         if self._solved_graph is not None:
             self._delta_acc = (delta if self._delta_acc is None
                                else self._delta_acc + delta)
@@ -179,18 +234,36 @@ class Session:
         # plan's internal space and gathers the result back, so only
         # the labeling differs — the honest fallback below remains for
         # unconverged/mismatched state, never for reordering alone
-        if warm and self._solved_ranks is not None \
-                and self._solved_key == key \
-                and 0.0 < tol and self._solved_res <= tol:
-            from .stream.delta import GraphDelta
-            from .stream.incremental import update_ranks
-            res = update_ranks(
-                self.plan, self._delta_acc or GraphDelta.of(),
-                self._solved_ranks, g_old=self._solved_graph,
-                g_new=self.graph, damping=kw["damping"],
-                dangling=kw["dangling"], tol=tol, max_push=budget)
-        else:
-            res = pagerank(self.graph, engine=self.engine, **kw)
+        warm_hit = (warm and self._solved_ranks is not None
+                    and self._solved_key == key
+                    and 0.0 < tol and self._solved_res <= tol)
+        sp = (self._obs.tracer.start(
+                  "solve", trace="plan", method=self.config.method,
+                  warm=bool(warm_hit), n=self.plan.num_nodes)
+              if self._obs is not None else None)
+        try:
+            if warm_hit:
+                from .stream.delta import GraphDelta
+                from .stream.incremental import update_ranks
+                res = update_ranks(
+                    self.plan, self._delta_acc or GraphDelta.of(),
+                    self._solved_ranks, g_old=self._solved_graph,
+                    g_new=self.graph, damping=kw["damping"],
+                    dangling=kw["dangling"], tol=tol, max_push=budget)
+            else:
+                res = pagerank(self.graph, engine=self.engine, **kw)
+        except Exception as e:
+            if sp is not None:
+                sp.end(status="error", error=repr(e))
+            raise
+        if self._obs is not None:
+            if not warm_hit:
+                # measured comm: one full gather/scatter pass per
+                # executed power iteration (warm pushes are sparse and
+                # don't stream the whole edge structure)
+                self._obs.comm.record_solve(self.plan, res.iterations)
+            sp.end(iterations=res.iterations,
+                   residual=float((res.residuals or [np.inf])[-1]))
         achieved = (res.residuals or [np.inf])[-1]
         self._solved_graph = self.graph
         self._solved_ranks = res.ranks
@@ -289,7 +362,8 @@ class Session:
         from .serve.scheduler import SlotScheduler
         cfg = self.config
         kw = dict(slots=cfg.slots, damping=cfg.damping, chunk=cfg.chunk,
-                  dangling=cfg.dangling, route=route, idmap=self.idmap)
+                  dangling=cfg.dangling, route=route, idmap=self.idmap,
+                  obs=self._obs)
         kw.update(overrides)
         return SlotScheduler(self.graph, engine=self.engine, **kw)
 

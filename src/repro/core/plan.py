@@ -29,6 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
+import weakref
 from typing import Any, Optional
 
 import numpy as np
@@ -287,6 +289,33 @@ _PLAN_CACHE: dict[tuple, GraphPlan] = {}
 _PNG_CACHE: dict[tuple, PNGLayout] = {}
 _STATS = PlanCacheStats()
 
+# Observability taps (obs/__init__.py Observability registers itself).
+# WeakSet: a dropped Observability stops receiving events without an
+# unregister call; emission with no observers is one falsy check.
+_PLAN_OBSERVERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def add_plan_observer(obs) -> None:
+    """Register an object with a ``plan_event(name, **attrs)`` method
+    to receive plan build/hit/patch notifications (held weakly)."""
+    _PLAN_OBSERVERS.add(obs)
+
+
+def remove_plan_observer(obs) -> None:
+    _PLAN_OBSERVERS.discard(obs)
+
+
+def notify_plan_event(name: str, **attrs) -> None:
+    """Fan an event out to registered observers.  Observer errors are
+    swallowed: telemetry must never fail a build."""
+    if not _PLAN_OBSERVERS:
+        return
+    for obs in list(_PLAN_OBSERVERS):
+        try:
+            obs.plan_event(name, **attrs)
+        except Exception:
+            pass
+
 # Bound on cached entries: a long-lived process streaming many graphs
 # through the (shim) constructors must not pin preprocessing arrays +
 # device uploads without limit.  Overflow evicts the oldest entry —
@@ -418,8 +447,12 @@ def shared_png(g: Graph, part_size: int) -> PNGLayout:
         _touch(_PNG_CACHE, key)
         return png
     _STATS.png_builds += 1
+    t0 = time.perf_counter()
     png = build_png(g, Partitioning(g.num_nodes, part_size))
     _bounded_insert(_PNG_CACHE, MAX_CACHED_PNGS, key, png)
+    notify_plan_event("png_build", part_size=part_size,
+                      n=g.num_nodes, m=g.num_edges,
+                      duration_s=time.perf_counter() - t0)
     return png
 
 
@@ -437,8 +470,11 @@ def build_plan(g: Graph, config: PlanConfig | None = None) -> GraphPlan:
     if plan is not None:
         _STATS.plan_hits += 1
         _touch(_PLAN_CACHE, key)
+        notify_plan_event("plan_cache_hit", method=cfg.method,
+                          fp=fp[:12])
         return plan
     _STATS.plan_builds += 1
+    t0 = time.perf_counter()
     if cfg.reorder != "none":
         # build every layout on the RELABELED graph (that's the whole
         # point — contiguous hub labels raise PNG compression), but
@@ -453,6 +489,10 @@ def build_plan(g: Graph, config: PlanConfig | None = None) -> GraphPlan:
     if plan.graph_fp is None:
         plan = dataclasses.replace(plan, graph_fp=fp)
     _bounded_insert(_PLAN_CACHE, MAX_CACHED_PLANS, key, plan)
+    notify_plan_event("plan_build", method=cfg.method,
+                      n=g.num_nodes, m=g.num_edges,
+                      reorder=cfg.reorder, fp=fp[:12],
+                      duration_s=time.perf_counter() - t0)
     return plan
 
 

@@ -51,6 +51,7 @@ class ResultCache:
         self.hits = 0
         self.misses = 0
         self.invalidated = 0
+        self.evictions = 0            # capacity-pressure LRU drops
 
     def get(self, key):
         with self._lock:
@@ -70,6 +71,7 @@ class ResultCache:
             self._entries.move_to_end(key)
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
+                self.evictions += 1
 
     def invalidate_fp(self, plan_fp: str) -> int:
         """Drop every entry solved against plan fingerprint

@@ -66,13 +66,23 @@ class Gateway:
 
     def __init__(self, schedulers, *, shares: dict | None = None,
                  config: GatewayConfig | None = None,
-                 name: str = "default"):
+                 name: str = "default", obs=None):
         if isinstance(schedulers, SlotScheduler):
             schedulers = {name: schedulers}
         if not schedulers:
             raise ValueError("gateway needs at least one scheduler")
         self.config = config or GatewayConfig()
         self._schedulers: dict[str, SlotScheduler] = dict(schedulers)
+        # observability: explicit bundle, or inherit the first
+        # attached scheduler's (Session wires the scheduler, the
+        # gateway follows — one bundle end to end)
+        self.obs = obs if obs is not None else next(
+            (s.obs for s in self._schedulers.values()
+             if s.obs is not None), None)
+        # gateway-level gauges/counters live in their own registry so
+        # metrics_endpoint() can merge them with every scheduler's
+        from ..obs.metrics import MetricsRegistry
+        self._gw_registry = MetricsRegistry()
         self._fair = WeightedFair(
             {n: 1.0 for n in self._schedulers} if shares is None
             else {n: shares.get(n, 1.0) for n in self._schedulers})
@@ -131,6 +141,18 @@ class Gateway:
         route, use_push = sch.validate_request(
             seeds is not None, top_k=top_k, tol=tol,
             max_iters=max_iters, route=route)
+        spans = None
+        if self.obs is not None:
+            # root opens HERE, on the caller's thread — the recorded
+            # interval is the client-observed latency (intake through
+            # future resolution); the uid binds later, in the
+            # scheduler's intake lock
+            from ..obs.trace import QuerySpans
+            spans = QuerySpans(
+                self.obs.tracer,
+                self.obs.tracer.start("query", graph=name, route=route),
+                gateway_owned=True)
+            spans.event("intake", push=use_push)
         kw = dict(top_k=top_k, tol=tol, max_iters=max_iters,
                   priority=priority, route=route)
         key = None
@@ -139,7 +161,7 @@ class Gateway:
                    float(tol), top_k, int(max_iters), route)
             hit = self.cache.get(key)
             if hit is not None:
-                return self._serve_cached(sch, hit)
+                return self._serve_cached(sch, hit, spans)
             sch.metrics.incr("cache_misses")
         if deadline_s is None:
             deadline_s = sch.resilience.default_deadline_s
@@ -150,20 +172,24 @@ class Gateway:
             with self._lock:
                 self._inflight += 1
             self._pool.submit(self._push_job, name, sch, seeds, kw,
-                              deadline, fut, key)
+                              deadline, fut, key, spans)
             return fut
         with self._lock:
             if len(self._pending) >= self.config.max_pending:
                 self._reject(sch, fut,
                              f"rejected: gateway backlog full "
-                             f"({self.config.max_pending})")
+                             f"({self.config.max_pending})",
+                             spans)
                 return fut
-            self._pending.append((name, seeds, kw, deadline, fut, key))
+            if spans is not None:
+                spans.start_child("backlog")
+            self._pending.append((name, seeds, kw, deadline, fut, key,
+                                  spans))
             self._inflight += 1
         self._wake.set()
         return fut
 
-    def _serve_cached(self, sch, hit: QueryResult) -> Future:
+    def _serve_cached(self, sch, hit: QueryResult, spans=None) -> Future:
         """A warm-result hit: mint a real uid and a full metrics trace
         (submitted/admitted/completed — the audit sees exactly one
         terminal per uid) and answer with the CACHED solve's arrays —
@@ -172,15 +198,21 @@ class Gateway:
         m = sch.metrics
         m.submitted(uid)
         m.admitted(uid)
-        m.completed(uid, iterations=hit.iterations, converged=True)
+        m.completed(uid, iterations=hit.iterations, converged=True,
+                    route="cached")
         m.incr("cache_hits")
+        if spans is not None:
+            spans.bind(uid)
+            spans.event("cache_hit")
+            spans.finish(served="cached")
+            spans.resolve()
         fut: Future = Future()
         fut.set_result(dataclasses.replace(
             hit, uid=uid, latency_s=m.traces[uid].latency_s,
             cached=True))
         return fut
 
-    def _reject(self, sch, fut: Future, err: str) -> None:
+    def _reject(self, sch, fut: Future, err: str, spans=None) -> None:
         """Terminal gateway-side rejection: a real uid, a full trace,
         the rejection counted — indistinguishable in the accounting
         from a scheduler-side shed."""
@@ -189,10 +221,15 @@ class Gateway:
         m.submitted(uid)
         m.incr("rejected")
         m.completed(uid, iterations=0, converged=False, error=err)
+        if spans is not None:
+            spans.bind(uid)
+            spans.finish(status="error", error=err)
+            spans.resolve(error=True)
         fut.set_result(QueryResult(uid, 0, False, None,
                                    m.traces[uid].latency_s, error=err))
 
-    def _push_job(self, name, sch, seeds, kw, deadline, fut, key):
+    def _push_job(self, name, sch, seeds, kw, deadline, fut, key,
+                  spans=None):
         """Worker-pool body: serve a push-eligible query inline via
         the scheduler's thread-safe submit (per-thread push engines).
         A push fallback lands in the scheduler's stepper queue — wake
@@ -200,8 +237,9 @@ class Gateway:
         try:
             remaining = (deadline - sch.clock()
                          if deadline is not None else None)
-            uid = sch.submit(seeds, deadline_s=remaining, **kw)
-            self._register(name, sch, uid, fut, key)
+            uid = sch.submit(seeds, deadline_s=remaining,
+                             _spans=spans, **kw)
+            self._register(name, sch, uid, fut, key, spans)
             self._wake.set()
         except BaseException as exc:   # noqa: BLE001 — surface, don't hang
             with self._lock:
@@ -210,18 +248,23 @@ class Gateway:
             fut.set_exception(exc)
 
     # --------------------------------------------------- result delivery
-    def _register(self, name, sch, uid, fut, key) -> None:
+    def _register(self, name, sch, uid, fut, key, spans=None) -> None:
         with self._lock:
             orphan = self._orphans.pop((name, uid), None)
             if orphan is None:
-                self._futures[(name, uid)] = (fut, key)
+                self._futures[(name, uid)] = (fut, key, spans)
                 return
-        self._deliver(orphan, fut, key)
+        self._deliver(orphan, fut, key, spans)
 
-    def _deliver(self, result: QueryResult, fut: Future, key) -> None:
+    def _deliver(self, result: QueryResult, fut: Future, key,
+                 spans=None) -> None:
         if (key is not None and result.converged
                 and result.error is None and not result.degraded):
             self.cache.put(key, result)
+        if spans is not None:
+            # ends the gateway-owned root: the recorded query interval
+            # is intake -> future resolution, the client's view
+            spans.resolve(error=result.error is not None)
         with self._lock:
             self._inflight -= 1
             if self._inflight == 0:
@@ -256,14 +299,17 @@ class Gateway:
             with self._lock:
                 if not self._pending:
                     return
-                name, seeds, kw, deadline, fut, key = \
+                name, seeds, kw, deadline, fut, key, spans = \
                     self._pending.popleft()
             sch = self._schedulers[name]
             try:
                 remaining = (deadline - sch.clock()
                              if deadline is not None else None)
-                uid = sch.submit(seeds, deadline_s=remaining, **kw)
-                self._register(name, sch, uid, fut, key)
+                if spans is not None:
+                    spans.end_child("backlog")
+                uid = sch.submit(seeds, deadline_s=remaining,
+                                 _spans=spans, **kw)
+                self._register(name, sch, uid, fut, key, spans)
             except BaseException as exc:  # noqa: BLE001
                 with self._lock:
                     self._inflight -= 1
@@ -309,7 +355,7 @@ class Gateway:
             self._loop_error = exc
             with self._lock:
                 stranded = ([e[4] for e in self._pending]
-                            + [f for f, _ in self._futures.values()])
+                            + [e[0] for e in self._futures.values()])
                 self._pending.clear()
                 self._futures.clear()
                 self._inflight = 0
@@ -413,6 +459,7 @@ class Gateway:
                         "capacity": self.cache.capacity,
                         "hits": self.cache.hits,
                         "misses": self.cache.misses,
+                        "evictions": self.cache.evictions,
                         "invalidated": self.cache.invalidated}
         out["graphs"] = {
             n: {"queued": s.queued, "active_slots": s.active_slots,
@@ -422,3 +469,46 @@ class Gateway:
         if self.autotune_report is not None:
             out["autotune"] = self.autotune_report.summary()
         return out
+
+    def metrics_endpoint(self) -> str:
+        """Prometheus text exposition of the whole gateway: every
+        scheduler's event/terminal counters (labeled ``graph=<name>``),
+        gateway backlog/cache/per-graph gauges, and — when an
+        observability bundle is attached — its cross-cutting registry
+        (plan events, comm accounting, crash dumps).  This is the
+        scrape hook a real deployment would mount at ``/metrics``;
+        gauges are synced at scrape time, so the text is a consistent
+        point-in-time snapshot."""
+        from ..obs.metrics import render_prometheus
+        reg = self._gw_registry
+        with self._lock:
+            reg.gauge("gateway_pending",
+                      "backlog depth").set(len(self._pending))
+            reg.gauge("gateway_inflight",
+                      "unresolved futures").set(self._inflight)
+            reg.gauge("gateway_orphans",
+                      "results awaiting registration"
+                      ).set(len(self._orphans))
+        c = self.cache
+        reg.gauge("gateway_cache_entries", "warm results held").set(len(c))
+        for nm, v in (("hits", c.hits), ("misses", c.misses),
+                      ("evictions", c.evictions),
+                      ("invalidated", c.invalidated)):
+            reg.gauge("gateway_cache_events",
+                      "warm-result cache accounting", event=nm).set(v)
+        for n, s in self._schedulers.items():
+            reg.gauge("scheduler_queued", "queued queries",
+                      graph=n).set(s.queued)
+            reg.gauge("scheduler_active_slots", "occupied slots",
+                      graph=n).set(s.active_slots)
+            reg.gauge("scheduler_trace_count",
+                      "stepper traces (must stay 1)",
+                      graph=n).set(s.trace_count)
+            reg.gauge("scheduler_rebind_count", "plan rebinds",
+                      graph=n).set(s.rebind_count)
+        pairs = [(reg, {})]
+        pairs += [(s.metrics.registry, {"graph": n})
+                  for n, s in self._schedulers.items()]
+        if self.obs is not None:
+            pairs.append((self.obs.registry, {}))
+        return render_prometheus(pairs)

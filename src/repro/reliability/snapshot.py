@@ -135,6 +135,14 @@ def snapshot_scheduler(sch, path: str) -> None:
                np.zeros((0, sch._n_pad), np.float32)),
         cols=(np.stack(cols) if k else
               np.zeros((0, sch._n_pad), np.float32)))
+    obs = getattr(sch, "obs", None)
+    if obs is not None:
+        # the snapshot IS the crash/quarantine forensics moment
+        # (DESIGN.md §14): park the flight recorder next to the state
+        obs.tracer.event("snapshot", trace="plan", path=str(path),
+                         in_flight=int(sum(1 for _, _, fl in specs
+                                           if fl)), queued=len(sch._queue))
+        obs.recorder.dump(f"{path}.trace.jsonl")
 
 
 def restore_scheduler(path: str, g, **scheduler_kwargs):

@@ -16,6 +16,17 @@ queries actually SERVED (error-free completions): a rejected query
 completes in microseconds and would otherwise drag p50 down exactly
 when the system is under the most stress.
 
+Single-home rule (DESIGN.md §14): every named event lives in exactly
+one place — the ``obs.metrics.MetricsRegistry`` each recorder owns
+(``serve_events_total{event=...}``).  The old ``collections.Counter``
+surface survives as a read-only VIEW (the ``counters`` property), so
+the pre-obs double-home drift — scheduler attributes and recorder
+counters updated at different points — is structurally impossible.
+``completed()`` additionally enforces the terminal contract at the
+choke point: a second completion for the same uid raises, and
+``reconcile()`` cross-checks the event counters against the trace
+table (the exactly-once audit in tests/test_serve_accounting.py).
+
 Edge-case contract: an empty recorder reports ``None`` for every
 statistic that has no defined value (percentiles, mean, qps) instead
 of fabricating 0.0 — and ``qps`` is ``None`` (not ``inf``) when the
@@ -29,6 +40,11 @@ import threading
 import time
 from typing import Optional
 
+from ..obs.metrics import MetricsRegistry
+
+EVENT_FAMILY = "serve_events_total"
+TERMINAL_FAMILY = "serve_terminals_total"
+
 
 @dataclasses.dataclass
 class QueryTrace:
@@ -40,6 +56,7 @@ class QueryTrace:
     converged: bool = False
     error: Optional[str] = None     # terminal failure (reject/fault)
     degraded: bool = False          # served approximate under pressure
+    route: Optional[str] = None     # "push" / "cached" / None (stepper)
 
     @property
     def latency_s(self) -> float | None:
@@ -72,17 +89,22 @@ class ServeMetrics:
     the whole admission path.
 
     Thread-safe: the recorder is shared between a scheduler's device
-    loop and the gateway's submit/worker threads (repro.gateway), so
-    every mutation — trace writes and counter increments — happens
-    under one internal lock.  ``Counter[name] += 1`` in particular is
-    a read-modify-write that silently loses updates under free-running
-    threads (the pre-gateway accounting bug).
+    loop and the gateway's submit/worker threads (repro.gateway).
+    Trace writes happen under one internal lock; event counters are
+    registry metrics with their own per-metric locks, so increments
+    from free-running threads never lose updates.
+
+    Each recorder owns its registry by default (reconciliation is a
+    per-scheduler property); pass ``registry=`` to aggregate several
+    recorders into one scrape surface — their samples stay separable
+    because the gateway labels each with its graph name.
     """
 
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter,
+                 registry: Optional[MetricsRegistry] = None):
         self.clock = clock
+        self.registry = registry if registry is not None else MetricsRegistry()
         self.traces: dict[int, QueryTrace] = {}
-        self.counters: collections.Counter = collections.Counter()
         self._lock = threading.Lock()
 
     def submitted(self, uid: int) -> None:
@@ -100,21 +122,42 @@ class ServeMetrics:
                 tr.t_admit = self.clock()
 
     def completed(self, uid: int, *, iterations: int, converged: bool,
-                  error: Optional[str] = None,
-                  degraded: bool = False) -> None:
+                  error: Optional[str] = None, degraded: bool = False,
+                  route: Optional[str] = None) -> None:
         with self._lock:
             tr = self.traces[uid]
+            if tr.t_done is not None:
+                raise RuntimeError(
+                    f"duplicate terminal for uid {uid}: already "
+                    f"completed (error={tr.error!r}), second "
+                    f"completion (error={error!r}) — every query must "
+                    "resolve exactly once")
             tr.t_done = self.clock()
             tr.iterations = iterations
             tr.converged = converged
             tr.error = error
             tr.degraded = degraded
+            tr.route = route
+        self.registry.counter(
+            TERMINAL_FAMILY, "terminal resolutions (exactly one "
+            "per query)").inc()
 
     def incr(self, name: str, n: int = 1) -> None:
         """Count one resilience event (rejection, expiry, degradation,
-        quarantine, ...)."""
-        with self._lock:
-            self.counters[name] += n
+        quarantine, ...) — single home: the registry."""
+        self.registry.counter(
+            EVENT_FAMILY, "named scheduler/gateway events",
+            event=name).inc(n)
+
+    @property
+    def counters(self) -> collections.Counter:
+        """Read-only view of the event counters in the legacy
+        ``collections.Counter`` shape (missing names read as 0, as
+        before).  Mutations go through ``incr``."""
+        c = collections.Counter()
+        for labels, metric in self.registry.family_items(EVENT_FAMILY):
+            c[labels["event"]] = int(metric.value)
+        return c
 
     def _trace_snapshot(self) -> list[QueryTrace]:
         """Consistent read of the trace table — iterating the live dict
@@ -144,10 +187,49 @@ class ServeMetrics:
             raise ValueError(f"unknown percentile kind {of!r}")
         return _percentile(vals, q)
 
+    def reconcile(self) -> dict:
+        """Cross-check event counters against the trace table.
+
+        Every family that is derivable from BOTH surfaces must agree
+        exactly: terminals vs completed traces, rejections/expiries vs
+        terminal error strings, push/cache serves vs trace routes.  A
+        mismatch means a counter was bumped without its terminal (or
+        vice versa) — the double-home drift this layer exists to kill.
+        Returns the checked values; raises ``AssertionError`` naming
+        the first disagreement.
+        """
+        traces = self._trace_snapshot()
+        done = [tr for tr in traces if tr.t_done is not None]
+        c = self.counters
+        checks = {
+            "terminals": (
+                int(self.registry.counter_value(TERMINAL_FAMILY)),
+                len(done)),
+            "rejected": (
+                c["rejected"],
+                sum(1 for tr in done if tr.error is not None
+                    and tr.error.startswith("rejected"))),
+            "expired": (
+                c["expired"],
+                sum(1 for tr in done
+                    if tr.error == "deadline expired in queue")),
+            "push_served": (
+                c["push_served"],
+                sum(1 for tr in done
+                    if tr.route == "push" and tr.error is None)),
+            "cache_hits_served": (
+                c["cache_hits"],
+                sum(1 for tr in done if tr.route == "cached")),
+        }
+        for name, (counted, derived) in checks.items():
+            assert counted == derived, (
+                f"counter/trace drift for {name!r}: counter says "
+                f"{counted}, trace table derives {derived}")
+        return {k: v[0] for k, v in checks.items()}
+
     def summary(self) -> dict:
-        with self._lock:
-            traces = list(self.traces.values())
-            counters = dict(self.counters)
+        traces = self._trace_snapshot()
+        counters = dict(self.counters)
         done = [tr for tr in traces if tr.t_done is not None]
         served = [tr for tr in done if tr.error is None]
         base = {

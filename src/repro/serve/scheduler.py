@@ -120,6 +120,10 @@ class Query:
     # the admitted column then cleared (a later quarantine retry must
     # re-admit the clean seed, not the possibly-poisoned estimate)
     warm_start: Optional[np.ndarray] = None
+    # per-query span bundle (obs/trace.py QuerySpans) when the owning
+    # scheduler/gateway has observability attached; None otherwise —
+    # every span hook is one ``q.obs is not None`` branch
+    obs: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -165,7 +169,7 @@ class SlotScheduler:
                  resilience: ResilienceConfig | None = None,
                  fault_injector=None, route: str = "auto",
                  push_tol: float = 1e-4, push_mode: str = "auto",
-                 push_max_sweeps: int = 64, idmap=None):
+                 push_max_sweeps: int = 64, idmap=None, obs=None):
         if slots < 1:
             raise ValueError(f"need at least one slot; got {slots}")
         if route not in ("auto", "push", "stepper"):
@@ -196,6 +200,10 @@ class SlotScheduler:
         self.idmap = idmap
         self.metrics = metrics or ServeMetrics()
         self.clock = self.metrics.clock
+        # observability bundle (obs/__init__.py) — None keeps every
+        # hot-path hook to a single falsy branch.  Set before
+        # _build_stepper so the construction compile is recorded.
+        self.obs = obs
         self.resilience = resilience or ResilienceConfig()
         self._injector = fault_injector       # test-only chaos hook
         self.trace_count = 0          # stepper traces — must stay 1
@@ -368,9 +376,18 @@ class SlotScheduler:
                                     inv_deg)
 
         state_spec, act_spec, tol_spec, bud_spec, inv_spec = self._specs
+        t0 = time.perf_counter()
         step_c = (jax.jit(counted_step, donate_argnums=(0,))
                   .lower(state_spec, state_spec, act_spec,
                          tol_spec, bud_spec, inv_spec).compile())
+        if self.obs is not None:
+            # trace_count/rebind_count were only attributes until now;
+            # this makes every XLA stepper compile a recorded event
+            self.obs.tracer.event(
+                "xla_compile", trace="plan", kind="stepper",
+                method=engine.method, slots=self.slots,
+                trace_count=self.trace_count,
+                duration_s=time.perf_counter() - t0)
         return step_c, inv_deg
 
     def apply_delta(self, delta, *, g_new: Graph | None = None) -> None:
@@ -402,6 +419,9 @@ class SlotScheduler:
                 "drain and construct a fresh scheduler for the updated "
                 "graph instead")
         self._delta_idx += 1
+        rsp = (self.obs.tracer.start("rebind", trace="plan",
+                                     delta_idx=self._delta_idx)
+               if self.obs is not None else None)
         try:
             if self._injector is not None:
                 self._injector.check_delta(self._delta_idx)
@@ -421,8 +441,11 @@ class SlotScheduler:
                 check_plan_integrity(new_plan)
             new_engine = SpMVEngine(g_new, plan=new_plan)
             step_c, inv_deg = self._build_stepper(new_engine, g_new)
-        except Exception:
+        except Exception as exc:
             self.metrics.incr("delta_failures")
+            if rsp is not None:
+                rsp.end(status="error",
+                        error=f"{type(exc).__name__}: {exc}")
             raise
         # commit under both locks: the step thread must not dispatch
         # against a half-swapped (plan, stepper, inv_deg) triple, and
@@ -439,12 +462,16 @@ class SlotScheduler:
             self._g_int = internal_graph(g_new, new_engine.plan)
             self._push_gen += 1
             self.rebind_count += 1
+        if rsp is not None:
+            rsp.end(rebind_count=self.rebind_count,
+                    n=g_new.num_nodes, m=g_new.num_edges)
 
     # ------------------------------------------------------------ intake
     def submit(self, seeds: np.ndarray | None = None, *,
                top_k: int | None = None, tol: float = 1e-6,
                max_iters: int = 100, deadline_s: float | None = None,
-               priority: int = 0, route: str | None = None) -> int:
+               priority: int = 0, route: str | None = None,
+               _spans=None) -> int:
         """Enqueue one query; returns its uid.  ``seeds`` is an (n,)
         teleport distribution (need not be normalized — it is), or None
         for uniform teleport.  ``tol=0`` runs exactly ``max_iters``
@@ -487,12 +514,20 @@ class SlotScheduler:
                 seed = np.pad(seed, (0, self._n_pad - self.n))
         if deadline_s is None:
             deadline_s = self.resilience.default_deadline_s
+        spans = _spans
+        if spans is None and self.obs is not None:
+            from ..obs.trace import QuerySpans
+            spans = QuerySpans(self.obs.tracer,
+                               self.obs.tracer.start("query",
+                                                     route=route))
         with self._lock:
             deadline = (self.clock() + deadline_s
                         if deadline_s is not None else None)
             uid = next_uid()
             q = Query(uid, seed, top_k, float(tol), int(max_iters),
-                      deadline, int(priority))
+                      deadline, int(priority), obs=spans)
+            if spans is not None:
+                spans.bind(uid)
             self.metrics.submitted(uid)
         if use_push and self._serve_push(q):
             return uid                # answered inline, never queued
@@ -503,6 +538,8 @@ class SlotScheduler:
                 self._terminal(q, error=f"rejected: admission queue "
                                         f"full ({cap})")
                 return uid
+            if q.obs is not None:
+                q.obs.start_child("queue")
             self._queue.append(q)
         return uid
 
@@ -609,6 +646,8 @@ class SlotScheduler:
         the consumed sweeps charged against the budget when the push
         ran but stopped above its bound (honest fallback, counted)."""
         self.metrics.admitted(q.uid)   # service starts now, no queue
+        if q.obs is not None:
+            q.obs.start_child("push")
         try:
             res = self._push_engine().query(
                 q.seed[:self.n], tol=q.tol,
@@ -616,6 +655,8 @@ class SlotScheduler:
                 top_k=q.top_k)
         except Exception:             # noqa: BLE001 — fall back, count
             self.metrics.incr("push_failures")
+            if q.obs is not None:
+                q.obs.end_child("push", status="error")
             return False
         if not res.converged:
             self.metrics.incr("push_fallbacks")
@@ -624,10 +665,14 @@ class SlotScheduler:
             if self._n_pad != self.n:
                 est = np.pad(est, (0, self._n_pad - self.n))
             q.warm_start = est
+            if q.obs is not None:
+                q.obs.end_child("push", status="fallback",
+                                sweeps=res.sweeps)
             return False
         self.metrics.incr("push_served")
         self.metrics.completed(q.uid, iterations=res.sweeps,
-                               converged=True, degraded=q.degraded)
+                               converged=True, degraded=q.degraded,
+                               route="push")
         if q.top_k is not None:
             ids = self._ids_to_original(np.asarray(res.top_ids))
             result = QueryResult(
@@ -642,6 +687,9 @@ class SlotScheduler:
                 self.metrics.traces[q.uid].latency_s,
                 ranks=self._vec_to_original(res.estimate),
                 degraded=q.degraded)
+        if q.obs is not None:
+            q.obs.end_child("push", sweeps=res.sweeps)
+            q.obs.finish(served="push", iterations=res.sweeps)
         with self._lock:
             self.completed.append(result)
         return True
@@ -667,6 +715,8 @@ class SlotScheduler:
         queue expiry) — explicit terminal state, never a silent drop."""
         self.metrics.completed(q.uid, iterations=0, converged=False,
                                error=error, degraded=q.degraded)
+        if q.obs is not None:
+            q.obs.finish(status="error", error=error)
         self.completed.append(QueryResult(
             q.uid, 0, False, None,
             self.metrics.traces[q.uid].latency_s, error=error,
@@ -710,6 +760,7 @@ class SlotScheduler:
             self.metrics.incr("degraded")
 
     def _admit(self, slot: int, q: Query) -> None:
+        was_warm = q.warm_start is not None   # cleared below, one-shot
         seed_dev = (self._uniform_seed if q.seed is None
                     else (jax.device_put(jnp.asarray(q.seed),
                                          self._vec_sharding)
@@ -734,6 +785,13 @@ class SlotScheduler:
         self._max_iters[slot] = q.max_iters
         self._slot_res[slot] = -1.0
         self.metrics.admitted(q.uid)
+        if q.obs is not None:
+            # a quarantine re-admission closes the previous slot span
+            # with status="retry" (QuerySpans.start_child) — the span
+            # tree shows each occupancy as its own interval
+            q.obs.end_child("queue")
+            q.obs.start_child("slot", slot=slot, retries=q.retries,
+                              warm=was_warm)
         if q.max_iters <= q.iters_done:
             # degenerate: no budget left — serve the column as-is
             self._finish(slot, q, residual=None)
@@ -788,6 +846,10 @@ class SlotScheduler:
                 self._inject_poisons()
             budget = np.minimum(self._max_iters - self._iters,
                                 np.iinfo(np.int32).max).astype(np.int32)
+        csp = (self.obs.tracer.start(
+                   "chunk", trace="device", step=self._step_idx,
+                   active=int(self._active.sum()))
+               if self.obs is not None else None)
         t0 = time.perf_counter()
         try:
             if self._injector is not None:
@@ -797,6 +859,9 @@ class SlotScheduler:
                 self._put_small(self._tol),
                 self._put_small(np.maximum(budget, 0)), self._inv_deg)
         except Exception as exc:      # noqa: BLE001 — resilience layer
+            if csp is not None:
+                csp.end(status="error",
+                        error=f"{type(exc).__name__}: {exc}")
             with self._lock:
                 self._recover_step_failure(exc)
                 return len(self.completed) - before
@@ -805,6 +870,14 @@ class SlotScheduler:
         active = np.asarray(active)
         took = np.asarray(took)
         res = np.asarray(res)
+        if csp is not None:
+            iters = int(took.max()) if took.size else 0
+            csp.end(iters=iters)
+            # measured bytes: the stepper computes the full (n, B)
+            # state per pass regardless of the freeze mask — B columns
+            # is the honest ncols (obs/comm.py)
+            self.obs.comm.record_pass(self.engine.plan, iters=iters,
+                                      ncols=self.slots)
         with self._lock:
             self._iters += took
             self._update_pressure(time.perf_counter() - t0,
@@ -926,6 +999,12 @@ class SlotScheduler:
         it = int(self._iters[slot])
         self.metrics.completed(q.uid, iterations=it, converged=False,
                                error=error, degraded=q.degraded)
+        if q.obs is not None:
+            q.obs.finish(status="error", error=error, iterations=it)
+        if self.obs is not None:
+            # PR 6's forensics moment: the in-flight query was lost to
+            # quarantine or a stepper failure — preserve the ring
+            self.obs.crash_dump(f"uid {q.uid}: {error}")
         self.completed.append(QueryResult(
             q.uid, it, False, None,
             self.metrics.traces[q.uid].latency_s, error=error,
@@ -941,6 +1020,9 @@ class SlotScheduler:
         converged = residual is not None and 0.0 <= residual < q.tol
         self.metrics.completed(q.uid, iterations=it, converged=converged,
                                degraded=q.degraded)
+        if q.obs is not None:
+            q.obs.end_child("slot", iterations=it, converged=converged,
+                            residual=residual)
         if converged:
             self._query_iters = (float(it) if self._query_iters is None
                                  else 0.7 * self._query_iters + 0.3 * it)
@@ -952,6 +1034,8 @@ class SlotScheduler:
                           .lower(self._state_spec, self._col_spec,
                                  k=q.top_k).compile())
                 self._topk_cache[q.top_k] = topk_c
+            if q.obs is not None:
+                q.obs.event("topk", k=q.top_k)
             ids, scores = topk_c(self._pr, col)
             ids = self._ids_to_original(np.asarray(ids))
             result = QueryResult(
@@ -961,12 +1045,17 @@ class SlotScheduler:
                 top_external=self._externalize(ids),
                 degraded=q.degraded)
         else:
+            if q.obs is not None:
+                q.obs.event("readback", n=self.n)
             ranks = np.asarray(self._extract_c(self._pr, col))[:self.n]
             result = QueryResult(
                 q.uid, it, converged, residual,
                 self.metrics.traces[q.uid].latency_s,
                 ranks=self._vec_to_original(ranks),
                 degraded=q.degraded)
+        if q.obs is not None:
+            q.obs.finish(iterations=it, converged=converged,
+                         degraded=q.degraded)
         self.completed.append(result)
         self._slot_query[slot] = None
         self._active[slot] = False

@@ -343,12 +343,17 @@ def patch_plan(plan: GraphPlan, delta: GraphDelta, g_new: Graph, *,
     # ids while the plan's layouts live in relabeled space — a splice
     # would patch the wrong partitions.  build_plan recomputes the
     # permutation for g_new; the parent_fp chain is preserved.
-    if (backend.patch_plan is None or cfg.reorder != "none"
-            or dirty_frac > dirty_threshold):
+    rebuilt = (backend.patch_plan is None or cfg.reorder != "none"
+               or dirty_frac > dirty_threshold)
+    if rebuilt:
         from ..core.plan import build_plan
         new_plan = dataclasses.replace(build_plan(g_new, cfg),
                                        parent_fp=plan.graph_fp)
     else:
         plan_mod.plan_cache_stats().plan_patches += 1
         new_plan = backend.patch_plan(plan, g_new, delta)
+    plan_mod.notify_plan_event(
+        "plan_patch", method=cfg.method, rebuilt=rebuilt,
+        adds=len(delta.add_src), removes=len(delta.rem_src),
+        dirty_frac=dirty_frac)
     return install_plan(g_new, new_plan)

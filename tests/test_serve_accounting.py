@@ -205,6 +205,10 @@ class TestTerminalAudit:
                 assert r.ranks is None and r.top_ids is None
             if r.converged:
                 assert r.residual is not None and r.residual >= 0.0
+        # single-home reconciliation (DESIGN.md §14): the registry
+        # counters and the trace table must derive the same totals —
+        # raises AssertionError naming the first drifted family
+        sch.metrics.reconcile()
         return by_uid
 
     def test_chaos_workload_resolves_every_uid(self, g):
